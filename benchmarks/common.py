@@ -1,0 +1,49 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import genotype as G, objectives as O
+from repro.fpga import device, netlist
+
+
+def problem(dev_name: str = "xcvu11p"):
+    return netlist.make_problem(device.get_device(dev_name))
+
+
+def plain_wirelength(prob, g) -> float:
+    """Paper Table I 'Wirelength' = sum of weighted Manhattan lengths."""
+    bx, by = G.decode(prob, g)
+    s, d = jnp.asarray(prob.net_src), jnp.asarray(prob.net_dst)
+    w = jnp.asarray(prob.net_w)
+    dl = (jnp.abs(bx[s] - bx[d]) + jnp.abs(by[s] - by[d])) * w
+    return float(jnp.sum(dl))
+
+
+def timed(fn, *args, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out))
+    return time.perf_counter() - t0, out
+
+
+def summarize(prob, g, objs) -> Dict[str, float]:
+    from repro.core import pipelining
+    rep = pipelining.auto_pipeline(prob, g, target_mhz=650.0)
+    return {
+        "wirelength": plain_wirelength(prob, g),
+        "wl2": float(objs[0]),
+        "max_bbox": float(objs[1]),
+        "pipeline_regs_650": rep.total_registers,
+        "freq_mhz_unpipelined": pipelining.frequency_at_depth(prob, g, 0),
+        "freq_mhz_pipelined": rep.freq_mhz,
+    }
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,59 @@
+"""Paper Fig. 7b: convergence of wirelength^2/bbox/combined per algorithm.
+
+Emits CSV rows (method, generation, evaluations, wl2, bbox, combined) for
+NSGA-II, NSGA-II-reduced, CMA-ES, GA (per-generation) and SA (per-step,
+subsampled).  The fidelity target is qualitative: CMA-ES drops bbox within
+hundreds of evaluations; NSGA-II reaches the best combined QoR by the end;
+reduced-genotype tracks full NSGA-II with a bbox gap (paper SS IV-B2).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import annealing, cmaes, evolve, ga, nsga2
+from repro.core import objectives as O
+
+
+def run(quick: bool = True, seed: int = 0, dev: str = "xcvu11p"):
+    prob = common.problem(dev)
+    key = jax.random.PRNGKey(seed)
+    scale = 0.2 if quick else 1.0
+    out = {}
+    algos = {
+        "nsga2": ("nsga2", nsga2.NSGA2Config(pop_size=32), int(250 * scale)),
+        "nsga2_reduced": ("nsga2",
+                          nsga2.NSGA2Config(pop_size=32, reduced=True),
+                          int(250 * scale)),
+        "cmaes": ("cmaes", cmaes.CMAESConfig(pop_size=24), int(500 * scale)),
+        "ga": ("ga", ga.GAConfig(pop_size=32), int(250 * scale)),
+    }
+    for name, (algo, cfg, gens) in algos.items():
+        _, hist = evolve.run(prob, algo, cfg, key, gens)
+        out[name] = (np.asarray(hist),
+                     getattr(cfg, "pop_size", 24))
+    sa_cfg = annealing.SAConfig(schedule="hyperbolic", beta=2e-3)
+    st0 = annealing.init_state(prob, key, sa_cfg)
+    res = annealing.run_chain(prob, sa_cfg, key, int(6000 * scale), st0)
+    out["sa"] = (np.asarray(res["history"]), 1)
+    return out
+
+
+def main(quick: bool = True) -> None:
+    out = run(quick=quick)
+    print("method,generation,evaluations,wl2,bbox,combined")
+    for name, (hist, per_gen) in out.items():
+        stride = max(1, len(hist) // 60)
+        for g in range(0, len(hist), stride):
+            wl2, bb = float(hist[g, 0]), float(hist[g, 1])
+            print(f"{name},{g},{(g + 1) * per_gen},{wl2:.4g},{bb:.1f},"
+                  f"{wl2 * bb:.4g}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(quick=not ap.parse_args().full)

@@ -1,0 +1,64 @@
+"""Paper Fig. 8: SA cooling-schedule tuning (4 schedules x parameter sets).
+
+Fidelity target: the hyperbolic schedule yields the best final combined QoR
+(the paper selects it for Table I).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import annealing
+from repro.core import objectives as O
+
+PARAM_SETS = {
+    "exponential": [dict(t0=t0, alpha=a) for t0 in (1.0, 3.0)
+                    for a in (0.999, 0.9995)],
+    "linear": [dict(t0=t0, n_steps=n) for t0 in (1.0, 3.0)
+               for n in (4000, 8000)],
+    "hyperbolic": [dict(t0=t0, beta=b) for t0 in (1.0, 3.0)
+                   for b in (1e-3, 5e-3)],
+    "adaptive": [dict(t0=t0, adapt_target=at) for t0 in (1.0, 3.0)
+                 for at in (0.2, 0.4)],
+}
+
+
+def run(quick: bool = True, seed: int = 0, dev: str = "xcvu11p"):
+    prob = common.problem(dev)
+    key = jax.random.PRNGKey(seed)
+    steps = 1500 if quick else 8000
+    rows = []
+    for sched, psets in PARAM_SETS.items():
+        best = np.inf
+        for i, ps in enumerate(psets):
+            cfg = annealing.SAConfig(schedule=sched, **ps)
+            st0 = annealing.init_state(prob, jax.random.fold_in(key, i), cfg)
+            res = annealing.run_chain(prob, cfg,
+                                      jax.random.fold_in(key, 100 + i),
+                                      steps, st0)
+            objs = np.asarray(res["state"]["best_objs"])
+            comb = float(objs[0] * objs[1])
+            rows.append((sched, i, float(objs[0]), float(objs[1]), comb))
+            best = min(best, comb)
+    return rows
+
+
+def main(quick: bool = True) -> None:
+    rows = run(quick=quick)
+    print("schedule,param_set,wl2,bbox,combined")
+    for r in rows:
+        print(f"{r[0]},{r[1]},{r[2]:.4g},{r[3]:.1f},{r[4]:.4g}")
+    bests = {}
+    for r in rows:
+        bests[r[0]] = min(bests.get(r[0], np.inf), r[4])
+    winner = min(bests, key=bests.get)
+    print(f"# best schedule: {winner} (paper: hyperbolic)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(quick=not ap.parse_args().full)

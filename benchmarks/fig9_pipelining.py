@@ -1,0 +1,54 @@
+"""Paper Fig. 9: clock frequency vs pipelining depth per placement method.
+
+Fidelity targets: NSGA-II >= 650 MHz with zero extra stages; others need
+>= 1 stage; NSGA-II/CMA-ES reach 750+ MHz by depth 2; everyone saturates
+toward the hard-block Fmax with depth.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import annealing, cmaes, evolve, nsga2, pipelining
+from repro.core import genotype as G, objectives as O
+
+
+def best_placements(quick: bool = True, seed: int = 0, dev: str = "xcvu11p"):
+    prob = common.problem(dev)
+    key = jax.random.PRNGKey(seed)
+    scale = 0.25 if quick else 1.0
+    out = {}
+    st, _ = evolve.run(prob, "nsga2", nsga2.NSGA2Config(pop_size=48),
+                       key, int(300 * scale))
+    i = int(np.argmin(np.asarray(O.combined_metric(st["objs"]))))
+    out["nsga2"] = jax.tree.map(lambda a: a[i], st["pop"])
+    cst, _ = evolve.run(prob, "cmaes", cmaes.CMAESConfig(pop_size=24),
+                        key, int(600 * scale))
+    out["cmaes"] = G.from_flat(prob, cst["best_z"])
+    sa_cfg = annealing.SAConfig(schedule="hyperbolic", beta=2e-3)
+    st0 = annealing.init_state(prob, key, sa_cfg)
+    res = annealing.run_chain(prob, sa_cfg, key, int(8000 * scale), st0)
+    out["sa"] = G.from_flat(prob, res["state"]["best_z"])
+    out["random(manual-proxy)"] = G.random_genotype(key, prob)
+    return prob, out
+
+
+def main(quick: bool = True) -> None:
+    prob, placements = best_placements(quick=quick)
+    print("method,depth,freq_mhz,registers")
+    for name, g in placements.items():
+        sweep = pipelining.depth_sweep(prob, g, 4)
+        for d in range(5):
+            print(f"{name},{d},{sweep[d]['freq_mhz']:.0f},"
+                  f"{sweep[d]['registers']}")
+    print("# paper: NSGA-II 650MHz@d0; CMA-ES/SA need >=1 stage; "
+          "750+ by d2 for NSGA-II/CMA-ES")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(quick=not ap.parse_args().full)

@@ -1,0 +1,98 @@
+"""SSRoofline: aggregate the dry-run artifacts into the three-term table.
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py), prints the
+per-(arch x shape x mesh) roofline terms, flags the dominant bottleneck, and
+nominates the three hillclimb cells: worst roofline fraction, most
+collective-bound, and most representative of the paper's technique (the
+expert-placement MoE cell).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def load(dirname: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: List[Dict], mesh: str = "pod16x16") -> None:
+    print("arch,shape,mesh,status,peak_GiB,compute_s,memory_s,collective_s,"
+          "dominant,useful_ratio,roofline_fraction")
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        t = r.get("roofline", {})
+        if r["status"] != "ok" or "compute_s" not in t:
+            # skipped cells and non-LM cells (vu_systolic executes the EA
+            # live rather than lowering a step; no roofline terms)
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']},,,,,"
+                  f",,")
+            continue
+        peak = r["memory"]["peak_estimate_bytes"] / 2 ** 30
+        # roofline fraction: useful-compute time / achievable step bound
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        chips = 512 if "2x16" in r["mesh"] else 256
+        ideal = t["model_flops"] / (chips * PEAK_FLOPS)
+        frac = ideal / bound if bound else 0.0
+        print(f"{r['arch']},{r['shape']},{r['mesh']},ok,{peak:.2f},"
+              f"{t['compute_s']:.4f},{t['memory_s']:.4f},"
+              f"{t['collective_s']:.4f},{t['dominant']},"
+              f"{t['useful_ratio']:.3f},{frac:.4f}")
+
+
+def nominate(rows: List[Dict]) -> None:
+    ok = [r for r in rows if r["status"] == "ok"
+          and r["mesh"] == "pod16x16"
+          and "compute_s" in r.get("roofline", {})]
+
+    def frac(r):
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        return (t["model_flops"] / (256 * PEAK_FLOPS)) / bound if bound else 0
+
+    def coll_share(r):
+        t = r["roofline"]
+        tot = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        return t["collective_s"] / tot if tot else 0
+
+    worst = min(ok, key=frac)
+    collb = max(ok, key=coll_share)
+    moe = [r for r in ok
+           if r["arch"] == "deepseek-moe-16b" and r["shape"] == "train_4k"]
+    print("\n# hillclimb nominations:")
+    print(f"#  worst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({frac(worst):.4f})")
+    print(f"#  most collective-bound:   {collb['arch']} x {collb['shape']} "
+          f"({100*coll_share(collb):.1f}% of step)")
+    if moe:
+        print(f"#  paper-representative:    deepseek-moe-16b x train_4k "
+              f"(expert placement == hard-block placement)")
+
+
+def main(dirname: str = "experiments/dryrun") -> None:
+    rows = load(dirname)
+    if not rows:
+        print("# no dry-run artifacts found; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return
+    for mesh in ("pod16x16", "pod2x16x16"):
+        table(rows, mesh)
+        print()
+    nominate(rows)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    main(ap.parse_args().dir)

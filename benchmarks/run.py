@@ -1,0 +1,57 @@
+"""Benchmark entry point: one function per paper table/figure + roofline.
+
+`python -m benchmarks.run` executes the quick variants of every benchmark
+and finishes with a `name,us_per_call,derived` CSV summary.  Pass --full for
+paper-scale budgets.
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import time
+from contextlib import redirect_stdout
+
+
+def _run(name, fn, *args, **kw):
+    buf = io.StringIO()
+    t0 = time.perf_counter()
+    with redirect_stdout(buf):
+        fn(*args, **kw)
+    dt = time.perf_counter() - t0
+    print(f"\n===== {name} ({dt:.1f}s) =====")
+    print(buf.getvalue().rstrip())
+    return dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig7_convergence, fig8_cooling, fig9_pipelining,
+                            roofline, table1, table2_transfer)
+
+    benches = {
+        "table1_qor": lambda: table1.main(quick=quick),
+        "fig7_convergence": lambda: fig7_convergence.main(quick=quick),
+        "fig8_cooling": lambda: fig8_cooling.main(quick=quick),
+        "fig9_pipelining": lambda: fig9_pipelining.main(quick=quick),
+        "table2_transfer": lambda: table2_transfer.main(quick=quick),
+        "roofline": lambda: roofline.main(),
+    }
+    rows = []
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        dt = _run(name, fn)
+        rows.append((name, dt * 1e6, "see section above"))
+
+    print("\n===== summary (name,us_per_call,derived) =====")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Paper Table I: runtime / wirelength / max-bbox / pipelining registers /
+frequency for NSGA-II, NSGA-II (reduced), CMA-ES, SA, GA on the VU11P rect.
+
+Paper reference values are printed alongside for the fidelity check:
+CMA-ES fastest (30x vs SA), NSGA-II best bbox + fewest registers, SA best
+raw wirelength, GA worst QoR.  Absolute wirelength units differ from the
+paper (reconstructed netlist weights); ratios are the reproduction target.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import annealing, cmaes, evolve, ga, nsga2
+from repro.core import genotype as G, objectives as O
+
+PAPER = {  # Table I (runtime s, wirelength, bbox, regs, MHz)
+    "nsga2": (586, 3.5e3, 1183, 256e3, 733),
+    "nsga2_reduced": (323, 3.5e3, 1543, 273e3, 688),
+    "cmaes": (51, 4.4e3, 1606, 273e3, 708),
+    "sa": (1577, 3.1e3, 1387, 273e3, 711),
+    "ga": (850, 9.2e3, 1908, 323e3, 585),
+}
+
+
+def run(quick: bool = True, seed: int = 0, dev: str = "xcvu11p"
+        ) -> Dict[str, Dict[str, float]]:
+    prob = common.problem(dev)
+    key = jax.random.PRNGKey(seed)
+    scale = 0.25 if quick else 1.0
+    budgets = {
+        "nsga2": ("nsga2", nsga2.NSGA2Config(pop_size=48),
+                  int(300 * scale)),
+        "nsga2_reduced": ("nsga2",
+                          nsga2.NSGA2Config(pop_size=48, reduced=True),
+                          int(300 * scale)),
+        "cmaes": ("cmaes", cmaes.CMAESConfig(pop_size=24),
+                  int(600 * scale)),
+        "ga": ("ga", ga.GAConfig(pop_size=48), int(300 * scale)),
+    }
+    rows: Dict[str, Dict[str, float]] = {}
+    for name, (algo, cfg, gens) in budgets.items():
+        dt, (state, hist) = common.timed(
+            evolve.run, prob, algo, cfg, key, gens)
+        if algo == "cmaes":
+            g, objs = cmaes.best_genotype(prob, state)
+        else:
+            if getattr(cfg, "reduced", False):
+                perms = jax.tree.map(lambda a: a[0], state["pop"])
+                g = {"dist": tuple(
+                    jax.numpy.log(jax.numpy.asarray(
+                        prob.geom[t].col_cap_chains, jax.numpy.float32)
+                        + 1e-3) for t in G.TYPES),
+                    "loc": tuple(jax.numpy.zeros(prob.geom[t].n_chains)
+                                 for t in G.TYPES),
+                    "perm": tuple(perms)}
+                objs = state["objs"][0]
+            else:
+                i = int(np.argmin(np.asarray(
+                    O.combined_metric(state["objs"]))))
+                g = jax.tree.map(lambda a: a[i], state["pop"])
+                objs = state["objs"][i]
+        row = common.summarize(prob, g, np.asarray(objs))
+        row["runtime_s"] = dt
+        row["evaluations"] = gens * getattr(cfg, "pop_size", 24)
+        rows[name] = row
+
+    # SA: scanned chain
+    sa_cfg = annealing.SAConfig(schedule="hyperbolic", t0=2.0, beta=2e-3)
+    n_steps = int(8000 * scale)
+    st0 = annealing.init_state(prob, key, sa_cfg)
+    t0 = time.perf_counter()
+    out = annealing.run_chain(prob, sa_cfg, key, n_steps, st0)
+    jax.block_until_ready(out["state"]["best_objs"])
+    dt = time.perf_counter() - t0
+    g = G.from_flat(prob, out["state"]["best_z"])
+    row = common.summarize(prob, g, np.asarray(out["state"]["best_objs"]))
+    row["runtime_s"] = dt
+    row["evaluations"] = n_steps
+    rows["sa"] = row
+    return rows
+
+
+def main(quick: bool = True) -> None:
+    rows = run(quick=quick)
+    hdr = ("method", "runtime_s", "evals", "wirelength", "max_bbox",
+           "regs@650", "MHz(d0)", "MHz(piped)")
+    print(",".join(hdr))
+    for name, r in rows.items():
+        print(f"{name},{r['runtime_s']:.1f},{r['evaluations']},"
+              f"{r['wirelength']:.0f},{r['max_bbox']:.0f},"
+              f"{r['pipeline_regs_650']},{r['freq_mhz_unpipelined']:.0f},"
+              f"{r['freq_mhz_pipelined']:.0f}")
+    print("\n# paper Table I reference (runtime_s, WL, bbox, regs, MHz):")
+    for k, v in PAPER.items():
+        print(f"#   {k}: {v}")
+    # fidelity ratios mirroring the paper's headline claims
+    sa, cm_, ns = rows["sa"], rows["cmaes"], rows["nsga2"]
+    red = rows["nsga2_reduced"]
+    print("\n# fidelity checks (paper expectation):")
+    print(f"# CMA-ES vs SA runtime: {sa['runtime_s']/cm_['runtime_s']:.1f}x "
+          f"faster (paper ~30x)")
+    print(f"# NSGA-II vs SA bbox: {sa['max_bbox']/ns['max_bbox']:.2f}x "
+          f"(paper ~1.2x better)")
+    print(f"# NSGA-II regs vs GA: {rows['ga']['pipeline_regs_650']/max(ns['pipeline_regs_650'],1):.2f}x "
+          f"(paper ~1.3x)")
+    print(f"# reduced-vs-full NSGA-II runtime: "
+          f"{ns['runtime_s']/max(red['runtime_s'],1e-9):.2f}x (paper ~1.8x)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(quick=not ap.parse_args().full)

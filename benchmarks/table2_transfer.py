@@ -1,0 +1,95 @@
+"""Paper Table II / Fig. 10: transfer learning across UltraScale+ devices.
+
+Seed device VU3P is optimized from scratch; siblings VU5P/VU7P/VU9P start
+from the migrated genotype.  Metric: evaluations to reach the scratch run's
+final QoR (the paper reports 11-14x placement-runtime speedups) plus final
+frequency deltas (paper: -2%..+7%).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import evolve, nsga2, pipelining, transfer
+from repro.core import genotype as G, objectives as O
+from repro.fpga import device, netlist
+
+
+def _best(state):
+    i = int(np.argmin(np.asarray(O.combined_metric(state["objs"]))))
+    return jax.tree.map(lambda a: a[i], state["pop"]), state["objs"][i]
+
+
+def _evals_to_target(hist: np.ndarray, target: float, per_gen: int) -> int:
+    comb = hist[:, 0] * hist[:, 1]
+    hit = np.where(comb <= target)[0]
+    return int((hit[0] + 1) * per_gen) if len(hit) else len(hist) * per_gen
+
+
+def run(quick: bool = True, seed: int = 0) -> Dict[str, Dict[str, float]]:
+    key = jax.random.PRNGKey(seed)
+    cfg = nsga2.NSGA2Config(pop_size=32)
+    gens = 60 if quick else 300
+    seed_dev = "xcvu3p"
+    prob_seed = netlist.make_problem(device.get_device(seed_dev))
+    st_seed, hist_seed = evolve.run(prob_seed, "nsga2", cfg, key, gens)
+    g_seed, _ = _best(st_seed)
+
+    out: Dict[str, Dict[str, float]] = {}
+    for dst in ("xcvu5p", "xcvu7p", "xcvu9p"):
+        prob = netlist.make_problem(device.get_device(dst))
+        # scratch
+        st_s, hist_s = evolve.run(prob, "nsga2", cfg,
+                                  jax.random.fold_in(key, 1), gens)
+        g_s, objs_s = _best(st_s)
+        target = float(np.asarray(O.combined_metric(objs_s))) * 1.05
+        # transfer: migrate + seeded population, same budget
+        g_mig = transfer.migrate(prob_seed, prob, g_seed)
+        st0 = transfer.seed_population(prob, g_mig,
+                                       jax.random.fold_in(key, 2),
+                                       cfg.pop_size)
+        m = evolve.get_algo("nsga2")
+
+        def body(st, k):
+            st = m.step(prob, cfg, st, k)
+            return st, evolve.state_best_objs(st)
+
+        st_t, hist_t = jax.lax.scan(
+            body, st0, jax.random.split(jax.random.fold_in(key, 3), gens))
+        g_t, objs_t = _best(st_t)
+
+        ev_scratch = _evals_to_target(np.asarray(hist_s), target,
+                                      cfg.pop_size)
+        ev_transfer = _evals_to_target(np.asarray(hist_t), target,
+                                       cfg.pop_size)
+        out[dst] = {
+            "units": device.get_device(dst).units_total,
+            "evals_scratch": ev_scratch,
+            "evals_transfer": ev_transfer,
+            "speedup": ev_scratch / max(ev_transfer, 1),
+            "mhz_scratch": pipelining.frequency_at_depth(prob, g_s, 1),
+            "mhz_transfer": pipelining.frequency_at_depth(prob, g_t, 1),
+        }
+    return out
+
+
+def main(quick: bool = True) -> None:
+    rows = run(quick=quick)
+    print("device,units,evals_scratch,evals_transfer,speedup,"
+          "mhz_scratch,mhz_transfer,freq_delta_pct")
+    for dev_name, r in rows.items():
+        dpct = 100 * (r["mhz_transfer"] / r["mhz_scratch"] - 1)
+        print(f"{dev_name},{r['units']},{r['evals_scratch']},"
+              f"{r['evals_transfer']},{r['speedup']:.1f},"
+              f"{r['mhz_scratch']:.0f},{r['mhz_transfer']:.0f},{dpct:+.1f}")
+    print("# paper: 11-14x placement speedup, freq delta -2%..+7%")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(quick=not ap.parse_args().full)

@@ -1,0 +1,62 @@
+"""Quickstart: evolutionary hard-block placement end to end on one device.
+
+    PYTHONPATH=src python examples/quickstart.py [--device xcvu11p]
+
+Runs NSGA-II on the device's repeating rectangle, prints the Pareto front,
+the ASCII floorplan of the champion, and its post-placement pipelining
+report (the paper's full SS III-B flow minus Vivado).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                                   # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.core import evolve, nsga2, objectives as O        # noqa: E402
+from repro.core import pipelining                            # noqa: E402
+from repro.fpga import device, floorplan, netlist            # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device", default="xcvu_test",
+                    help=f"one of {device.list_devices()}")
+    ap.add_argument("--generations", type=int, default=60)
+    ap.add_argument("--pop", type=int, default=32)
+    args = ap.parse_args()
+
+    dev = device.get_device(args.device)
+    prob = netlist.make_problem(dev)
+    print(f"{dev.name}: {prob.n_units} conv units/rect x {dev.n_rects} "
+          f"rects, {prob.n_blocks} hard blocks, {prob.n_nets} nets, "
+          f"util={ {k: f'{v:.1%}' for k, v in dev.utilization().items()} }")
+
+    t0 = time.time()
+    state, hist = evolve.run(prob, "nsga2",
+                             nsga2.NSGA2Config(pop_size=args.pop),
+                             jax.random.PRNGKey(0), args.generations)
+    objs = np.asarray(state["objs"])
+    rank = np.asarray(nsga2.nondominated_rank(state["objs"]))
+    print(f"\n{args.generations} generations in {time.time()-t0:.1f}s; "
+          f"Pareto front ({int((rank == 0).sum())} candidates):")
+    for i in np.where(rank == 0)[0][:8]:
+        print(f"  wl2={objs[i,0]:.3e}  max_bbox={objs[i,1]:.0f}")
+
+    best = int(np.argmin(np.asarray(O.combined_metric(state["objs"]))))
+    g = jax.tree.map(lambda a: a[best], state["pop"])
+    O.assert_valid(prob, g)
+    print("\nchampion placement (validated legal):")
+    print(floorplan.ascii_floorplan(prob, g, width=100, height=24))
+
+    rep = pipelining.auto_pipeline(prob, g, target_mhz=650.0)
+    print(f"\npipelining to 650 MHz: {rep.total_registers} registers, "
+          f"achieved {rep.freq_mhz:.0f} MHz "
+          f"(unpipelined {pipelining.frequency_at_depth(prob, g, 0):.0f} MHz,"
+          f" longest net {rep.max_net_rpm:.0f} RPM)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCHS, SHAPES, get_arch, get_reduced,
+                                input_specs, list_archs)
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "get_reduced", "input_specs",
+           "list_archs"]

@@ -1,0 +1,124 @@
+"""Simulated annealing baseline with the paper's cooling-schedule sweep.
+
+The paper tunes SA over four cooling schedules (Fig. 8) and reports the
+hyperbolic schedule as best.  Moves mirror the Opt4J genotype operators:
+perturb one distribution gene, perturb one location gene, or swap two
+mapping keys (the permutation move); Metropolis acceptance on the scalarized
+log(wl^2 x bbox).  Multiple chains run in parallel via vmap -- used both for
+statistics and as the parallel-restart baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+SCHEDULES = ("exponential", "linear", "hyperbolic", "adaptive")
+
+
+@dataclasses.dataclass(frozen=True)
+class SAConfig:
+    schedule: str = "hyperbolic"
+    t0: float = 2.0
+    alpha: float = 0.999           # exponential decay
+    beta: float = 5e-3             # hyperbolic 1/(1+beta k)
+    n_steps: int = 20000           # linear schedule horizon
+    move_sigma: float = 0.6
+    adapt_target: float = 0.3      # adaptive: target acceptance rate
+
+
+def _temperature(cfg: SAConfig, k: jnp.ndarray, t_adapt: jnp.ndarray
+                 ) -> jnp.ndarray:
+    kf = k.astype(jnp.float32)
+    if cfg.schedule == "exponential":
+        return cfg.t0 * cfg.alpha ** kf
+    if cfg.schedule == "linear":
+        return cfg.t0 * jnp.maximum(1.0 - kf / cfg.n_steps, 1e-4)
+    if cfg.schedule == "hyperbolic":
+        return cfg.t0 / (1.0 + cfg.beta * kf)
+    if cfg.schedule == "adaptive":
+        return t_adapt
+    raise ValueError(cfg.schedule)
+
+
+def init_state(problem: Problem, key: jax.Array, cfg: SAConfig) -> Dict:
+    z = jax.random.normal(key, (problem.continuous_dim,)) * 0.1
+    objs = O.evaluate(problem, G.from_flat(problem, z))
+    return {"z": z, "fit": O.scalarize(objs), "objs": objs,
+            "k": jnp.int32(0), "t_adapt": jnp.float32(cfg.t0),
+            "acc_ema": jnp.float32(0.5),
+            "best_z": z, "best_objs": objs}
+
+
+def _move(problem: Problem, key: jax.Array, z: jnp.ndarray,
+          sigma: float) -> jnp.ndarray:
+    """One random neighbourhood move on the flat genotype."""
+    sl = G.flat_split(problem)
+    kk = jax.random.split(key, 4)
+    kind = jax.random.randint(kk[0], (), 0, 3)
+
+    def perturb(lo, hi, k):
+        i = jax.random.randint(k, (), lo, hi)
+        return z.at[i].add(jax.random.normal(kk[2]) * sigma)
+
+    def swap_keys(k):
+        # permutation move: swap two random keys inside one perm block
+        t = jax.random.randint(k, (), 0, 3)
+        lo = jnp.array([sl[6][0], sl[7][0], sl[8][0]])[t]
+        hi = jnp.array([sl[6][1], sl[7][1], sl[8][1]])[t]
+        ki, kj = jax.random.split(kk[2])
+        i = lo + jax.random.randint(ki, (), 0, hi - lo)
+        j = lo + jax.random.randint(kj, (), 0, hi - lo)
+        zi, zj = z[i], z[j]
+        return z.at[i].set(zj).at[j].set(zi)
+
+    return jax.lax.switch(kind, [
+        lambda: perturb(sl[0][0], sl[2][1], kk[1]),      # distribution tier
+        lambda: perturb(sl[3][0], sl[5][1], kk[1]),      # location tier
+        lambda: swap_keys(kk[1]),                        # mapping tier
+    ])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def step(problem: Problem, cfg: SAConfig, state: Dict, key: jax.Array
+         ) -> Dict:
+    k1, k2 = jax.random.split(key)
+    t = _temperature(cfg, state["k"], state["t_adapt"])
+    z_new = _move(problem, k1, state["z"], cfg.move_sigma)
+    objs_new = O.evaluate(problem, G.from_flat(problem, z_new))
+    fit_new = O.scalarize(objs_new)
+    delta = fit_new - state["fit"]
+    accept = (delta <= 0) | (
+        jax.random.uniform(k2) < jnp.exp(-delta / jnp.maximum(t, 1e-8)))
+    z = jnp.where(accept, z_new, state["z"])
+    fit = jnp.where(accept, fit_new, state["fit"])
+    objs = jnp.where(accept, objs_new, state["objs"])
+
+    acc_ema = 0.99 * state["acc_ema"] + 0.01 * accept.astype(jnp.float32)
+    t_adapt = state["t_adapt"] * jnp.where(
+        acc_ema > cfg.adapt_target, 0.999, 1.001)
+
+    better = fit < O.scalarize(state["best_objs"])
+    return {"z": z, "fit": fit, "objs": objs, "k": state["k"] + 1,
+            "t_adapt": t_adapt, "acc_ema": acc_ema,
+            "best_z": jnp.where(better, z, state["best_z"]),
+            "best_objs": jnp.where(better, objs, state["best_objs"])}
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 3))
+def run_chain(problem: Problem, cfg: SAConfig, key: jax.Array,
+              n_steps: int, state: Dict) -> Dict:
+    """Scan a full chain in one XLA program (keys derived on the fly)."""
+
+    def body(st, k):
+        return step(problem, cfg, st, k), st["best_objs"]
+
+    state, hist = jax.lax.scan(body, state, jax.random.split(key, n_steps))
+    return {"state": state, "history": hist}

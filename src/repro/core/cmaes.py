@@ -1,0 +1,134 @@
+"""sep-CMA-ES: the linear-time/space diagonal CMA-ES of Ros & Hansen (2008),
+the "high-dimensional variant [26]" the paper uses for placement.
+
+Operates on the flat continuous genotype encoding (distribution genes raw,
+location genes via sigmoid, mapping permutations via random keys + argsort),
+so "crossover and mutation become adding Gaussian noise to the samplings"
+exactly as in paper SS II-D.  Fitness is the scalarized combined objective
+log(wirelength^2) + log(max bbox).
+
+State update uses the standard CMA-ES machinery restricted to a diagonal
+covariance, with the separable learning-rate speedup c_cov *= (n+2)/3.
+One generation = one jitted XLA program; sampling + evaluation are vmapped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+
+@dataclasses.dataclass(frozen=True)
+class CMAESConfig:
+    pop_size: int = 0            # 0 -> 4 + floor(3 ln n)
+    sigma0: float = 0.3
+
+    def lam(self, n: int) -> int:
+        return self.pop_size if self.pop_size > 0 else 4 + int(3 * math.log(n))
+
+
+def _constants(n: int, lam: int):
+    mu = lam // 2
+    w = jnp.log(mu + 0.5) - jnp.log(jnp.arange(1, mu + 1, dtype=jnp.float32))
+    w = w / jnp.sum(w)
+    mu_eff = 1.0 / jnp.sum(w ** 2)
+    c_sigma = (mu_eff + 2.0) / (n + mu_eff + 5.0)
+    d_sigma = (1.0 + 2.0 * jnp.maximum(
+        0.0, jnp.sqrt((mu_eff - 1.0) / (n + 1.0)) - 1.0) + c_sigma)
+    c_c = (4.0 + mu_eff / n) / (n + 4.0 + 2.0 * mu_eff / n)
+    c_1 = 2.0 / ((n + 1.3) ** 2 + mu_eff)
+    c_mu = jnp.minimum(
+        1.0 - c_1,
+        2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((n + 2.0) ** 2 + mu_eff))
+    # separable speedup (Ros & Hansen 2008): diagonal model learns ~n/3 faster
+    sep = (n + 2.0) / 3.0
+    c_1 = jnp.minimum(1.0, c_1 * sep)
+    c_mu = jnp.minimum(1.0 - c_1, c_mu * sep)
+    chi_n = math.sqrt(n) * (1.0 - 1.0 / (4.0 * n) + 1.0 / (21.0 * n * n))
+    return dict(mu=mu, w=w, mu_eff=mu_eff, c_sigma=c_sigma, d_sigma=d_sigma,
+                c_c=c_c, c_1=c_1, c_mu=c_mu, chi_n=chi_n)
+
+
+def init_state(problem: Problem, key: jax.Array, cfg: CMAESConfig,
+               mean0: Optional[jnp.ndarray] = None) -> Dict:
+    n = problem.continuous_dim
+    mean = (jnp.asarray(mean0, jnp.float32) if mean0 is not None
+            else jax.random.normal(key, (n,)) * 0.1)
+    return {
+        "mean": mean,
+        "sigma": jnp.float32(cfg.sigma0),
+        "c_diag": jnp.ones(n, jnp.float32),
+        "p_sigma": jnp.zeros(n, jnp.float32),
+        "p_c": jnp.zeros(n, jnp.float32),
+        "gen": jnp.int32(0),
+        "best_objs": jnp.array([jnp.inf, jnp.inf], jnp.float32),
+        "best_z": mean,
+    }
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def step(problem: Problem, cfg: CMAESConfig, state: Dict, key: jax.Array
+         ) -> Dict:
+    n = problem.continuous_dim
+    lam = cfg.lam(n)
+    c = _constants(n, lam)
+    mu, w = c["mu"], c["w"]
+
+    z = jax.random.normal(key, (lam, n))
+    y = z * jnp.sqrt(state["c_diag"])[None, :]
+    x = state["mean"][None, :] + state["sigma"] * y
+
+    objs = O.evaluate_flat_population(problem, x)          # [lam, 2]
+    fit = O.scalarize(objs)
+    order = jnp.argsort(fit)
+    y_sel = y[order[:mu]]                                  # [mu, n]
+    z_sel = z[order[:mu]]
+
+    y_w = jnp.sum(w[:, None] * y_sel, axis=0)
+    z_w = jnp.sum(w[:, None] * z_sel, axis=0)
+    mean = state["mean"] + state["sigma"] * y_w
+
+    p_sigma = ((1.0 - c["c_sigma"]) * state["p_sigma"]
+               + jnp.sqrt(c["c_sigma"] * (2.0 - c["c_sigma"]) * c["mu_eff"])
+               * z_w)
+    ps_norm = jnp.linalg.norm(p_sigma)
+    sigma = state["sigma"] * jnp.exp(
+        (c["c_sigma"] / c["d_sigma"]) * (ps_norm / c["chi_n"] - 1.0))
+
+    gen = state["gen"] + 1
+    h_sig = (ps_norm / jnp.sqrt(
+        1.0 - (1.0 - c["c_sigma"]) ** (2.0 * gen)) / c["chi_n"]
+        < 1.4 + 2.0 / (n + 1.0)).astype(jnp.float32)
+    p_c = ((1.0 - c["c_c"]) * state["p_c"]
+           + h_sig * jnp.sqrt(c["c_c"] * (2.0 - c["c_c"]) * c["mu_eff"])
+           * y_w)
+
+    rank_mu = jnp.sum(w[:, None] * (y_sel ** 2), axis=0)
+    c_diag = ((1.0 - c["c_1"] - c["c_mu"]) * state["c_diag"]
+              + c["c_1"] * (p_c ** 2
+                            + (1.0 - h_sig) * c["c_c"]
+                            * (2.0 - c["c_c"]) * state["c_diag"])
+              + c["c_mu"] * rank_mu)
+    c_diag = jnp.maximum(c_diag, 1e-12)
+
+    best_i = order[0]
+    improved = fit[best_i] < O.scalarize(state["best_objs"])
+    best_objs = jnp.where(improved, objs[best_i], state["best_objs"])
+    best_z = jnp.where(improved, x[best_i], state["best_z"])
+
+    return {"mean": mean, "sigma": sigma, "c_diag": c_diag,
+            "p_sigma": p_sigma, "p_c": p_c, "gen": gen,
+            "best_objs": best_objs, "best_z": best_z}
+
+
+def best_genotype(problem: Problem, state: Dict) -> Tuple[G.Genotype,
+                                                          jnp.ndarray]:
+    return G.from_flat(problem, state["best_z"]), state["best_objs"]

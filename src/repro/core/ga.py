@@ -1,0 +1,75 @@
+"""Single-objective GA baseline (paper Table I column "GA", ref [37]).
+
+Same composite-genotype operators as NSGA-II (SBX + polynomial mutation on
+the real tiers, OX + swap on the mapping permutations), but selection is a
+plain fitness tournament on the scalarized objective and survival is
+elitist truncation -- the configuration the paper attributes to classic
+evolutionary placers, whose crossover weakness NSGA-II/CMA-ES overcome.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import genotype as G
+from repro.core import nsga2 as N
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    pop_size: int = 64
+    crossover_prob: float = 0.9
+    sbx_eta: float = 15.0
+    mut_eta: float = 20.0
+    real_mut_prob: float = 0.1
+    perm_swaps: int = 2
+    perm_swap_prob: float = 0.6
+    elite: int = 4
+
+    def as_nsga2(self) -> N.NSGA2Config:
+        return N.NSGA2Config(
+            pop_size=self.pop_size, crossover_prob=self.crossover_prob,
+            sbx_eta=self.sbx_eta, mut_eta=self.mut_eta,
+            real_mut_prob=self.real_mut_prob, perm_swaps=self.perm_swaps,
+            perm_swap_prob=self.perm_swap_prob)
+
+
+def init_state(problem: Problem, key: jax.Array, cfg: GAConfig) -> Dict:
+    keys = jax.random.split(key, cfg.pop_size)
+    pop = jax.vmap(lambda k: G.random_genotype(k, problem))(keys)
+    objs = O.evaluate_population(problem, pop)
+    return {"pop": pop, "objs": objs}
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def step(problem: Problem, cfg: GAConfig, state: Dict, key: jax.Array
+         ) -> Dict:
+    pop, objs = state["pop"], state["objs"]
+    p = cfg.pop_size
+    fit = O.scalarize(objs)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def tourney(k):
+        ia = jax.random.randint(k, (p,), 0, p)
+        ib = jax.random.randint(jax.random.fold_in(k, 1), (p,), 0, p)
+        return jnp.where(fit[ia] <= fit[ib], ia, ib)
+
+    pa, pb = tourney(k1), tourney(k2)
+    take = lambda idx: jax.tree.map(lambda a: a[idx], pop)
+    children = jax.vmap(
+        lambda k, g1, g2: N._vary_one(k, g1, g2, cfg.as_nsga2()))(
+        jax.random.split(k3, p), take(pa), take(pb))
+    cobjs = O.evaluate_population(problem, children)
+
+    # elitist truncation over parents + children by scalar fitness
+    allpop = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), pop, children)
+    allobjs = jnp.concatenate([objs, cobjs])
+    order = jnp.argsort(O.scalarize(allobjs))[:p]
+    return {"pop": jax.tree.map(lambda a: a[order], allpop),
+            "objs": allobjs[order]}

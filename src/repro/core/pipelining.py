@@ -1,0 +1,90 @@
+"""Post-placement pipelining + wire-delay timing model (paper SS III-B, IV-C).
+
+After placement is final, per-net Manhattan wirelengths are exact, so the
+right nets can be pipelined to exactly the required depth -- the paper's
+argument for post-placement (vs. overprovisioned pre-implementation)
+pipelining.  Vivado timing is unavailable here; we use a linear wire-delay
+model calibrated to the paper's anchors:
+
+    delay(net)  = K_NS_PER_RPM * manhattan_rpm / (stages + 1)
+    period      = T_BASE_NS + max_net delay        (logic + clocking floor)
+    f           = min(1/period, F_CEIL)            URAM Fmax ceiling
+
+Anchors: an NSGA-II-optimized VU11P placement reaches ~650 MHz with zero
+extra stages and 733 MHz average (Table I); hard-block Fmax caps at 891 MHz.
+Register cost of a stage = bus width of the net (netlist bits), times the
+full-chip replication factor (the rect is copy-pasted n_rects times).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+T_BASE_NS = 1.10       # clk->q + setup + local route floor  (~909 MHz asymptote)
+K_NS_PER_RPM = 7.0e-3  # incremental route delay per RPM unit of wirelength
+F_CEIL_MHZ = 891.0     # UltraScale+ URAM/DSP hard Fmax
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    freq_mhz: float                # at the chosen pipelining depth
+    stages_per_net: np.ndarray     # [N] inserted stages
+    total_registers: int           # chip-wide (x n_rects)
+    max_net_rpm: float
+    depth: int
+
+
+def frequency_at_depth(problem: Problem, g: G.Genotype, depth: int) -> float:
+    """Uniform-depth pipelining: every net gets `depth` stages (Fig. 9)."""
+    lens = np.asarray(O.net_lengths(problem, g))
+    period = T_BASE_NS + K_NS_PER_RPM * lens.max() / (depth + 1)
+    return float(min(1e3 / period, F_CEIL_MHZ))
+
+
+def registers_at_depth(problem: Problem, depth: int) -> int:
+    bits = int(problem.net_bits.sum())
+    return bits * depth * problem.n_rects
+
+
+def auto_pipeline(problem: Problem, g: G.Genotype,
+                  target_mhz: float = 650.0) -> PipelineReport:
+    """Per-net minimal pipelining to hit `target_mhz` (paper's 650 MHz).
+
+    stages(net) = ceil(K * len / slack) - 1, slack = 1/f_target - T_BASE.
+    Nets already fast enough get zero stages -- this is where NSGA-II's small
+    bounding boxes save ~6-16% of registers (Table I).
+    """
+    lens = np.asarray(O.net_lengths(problem, g), np.float64)
+    slack_ns = 1e3 / target_mhz - T_BASE_NS
+    if slack_ns <= 0:
+        raise ValueError(f"target {target_mhz} MHz above model ceiling")
+    stages = np.maximum(
+        np.ceil(K_NS_PER_RPM * lens / slack_ns) - 1.0, 0.0).astype(np.int64)
+    regs = int((stages * problem.net_bits).sum()) * problem.n_rects
+    # achieved frequency with those stages
+    seg = K_NS_PER_RPM * lens / (stages + 1)
+    f = min(1e3 / (T_BASE_NS + seg.max()), F_CEIL_MHZ)
+    return PipelineReport(freq_mhz=float(f),
+                          stages_per_net=stages,
+                          total_registers=regs,
+                          max_net_rpm=float(lens.max()),
+                          depth=int(stages.max()))
+
+
+def depth_sweep(problem: Problem, g: G.Genotype, max_depth: int = 4
+                ) -> Dict[int, Dict[str, float]]:
+    """Fig. 9 data: frequency and register cost per uniform pipeline depth."""
+    out = {}
+    for d in range(max_depth + 1):
+        out[d] = {
+            "freq_mhz": frequency_at_depth(problem, g, d),
+            "registers": registers_at_depth(problem, d),
+        }
+    return out

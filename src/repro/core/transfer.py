@@ -1,0 +1,93 @@
+"""Transfer learning across UltraScale+ devices (paper SS IV-D, Table II).
+
+A converged genotype on a *seed* device warm-starts the search on a sibling
+device: the three genotype tiers migrate independently --
+
+  distribution : per-column genes map by relative x position (nearest
+                 fractional-width neighbour between the two column sets),
+  location     : per-chain genes tile periodically when the design grows,
+  mapping      : the permutation extends order-preservingly (argsort of
+                 tiled rank keys), keeping the seed's relative structure.
+
+This is exactly what the three-tier genotype buys (paper SS III-A.3): each
+tier is meaningful on its own, so it survives re-targeting to a device with
+different column counts / arrangements.  The migrated genotype then seeds
+CMA-ES (mean := seed, small sigma) or NSGA-II (population := seed + jitter).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import genotype as G
+from repro.fpga.netlist import Problem
+
+
+def _map_columns(src_x: np.ndarray, dst_x: np.ndarray) -> np.ndarray:
+    """For each dst column, the src column at the nearest relative x."""
+    sx = (src_x - src_x.min()) / max(np.ptp(src_x), 1e-9)
+    dx = (dst_x - dst_x.min()) / max(np.ptp(dst_x), 1e-9)
+    return np.argmin(np.abs(dx[:, None] - sx[None, :]), axis=1)
+
+
+def migrate(src: Problem, dst: Problem, g: G.Genotype) -> G.Genotype:
+    """Project a genotype from the seed device's problem onto the target's."""
+    dist, loc, perm = [], [], []
+    for t in G.TYPES:
+        gs, gd = src.geom[t], dst.geom[t]
+        # distribution: nearest-relative-x column gene
+        cmap = _map_columns(np.asarray(gs.col_x), np.asarray(gd.col_x))
+        dist.append(jnp.asarray(np.asarray(g["dist"][t])[cmap]))
+        # location: periodic tiling over the (possibly larger) chain count
+        ls = np.asarray(g["loc"][t])
+        idx = np.arange(gd.n_chains) % gs.n_chains
+        loc.append(jnp.asarray(ls[idx]))
+        # mapping: order-preserving extension.  Tile the seed permutation
+        # block-wise into rank keys; argsort yields a valid permutation
+        # that preserves the seed's relative order in every block.
+        ps = np.asarray(g["perm"][t])
+        n_rep = -(-gd.n_chains // gs.n_chains)
+        keys = np.concatenate(
+            [ps + r * gs.n_chains for r in range(n_rep)])[:gd.n_chains]
+        # rank(keys) == keys when the sizes tile exactly (identity transfer
+        # for same-geometry devices); otherwise ranks compact the overflow
+        perm.append(jnp.asarray(np.argsort(np.argsort(keys)), jnp.int32))
+    return {"dist": tuple(dist), "loc": tuple(loc), "perm": tuple(perm)}
+
+
+def seed_population(problem: Problem, g_seed: G.Genotype, key: jax.Array,
+                    pop_size: int, jitter: float = 0.15) -> Dict:
+    """NSGA-II warm-start: seed + mutated copies (evaluated lazily by init)."""
+    from repro.core import nsga2 as N
+    from repro.core import objectives as O
+
+    def jit_one(k):
+        kk = jax.random.split(k, 7)
+        dist = tuple(g_seed["dist"][t]
+                     + jax.random.normal(kk[t], g_seed["dist"][t].shape)
+                     * jitter for t in G.TYPES)
+        loc = tuple(jnp.clip(
+            g_seed["loc"][t]
+            + jax.random.normal(kk[3 + t], g_seed["loc"][t].shape) * jitter,
+            0.0, 1.0) for t in G.TYPES)
+        perm = tuple(N._swap_mut(jax.random.fold_in(kk[6], t),
+                                 g_seed["perm"][t], 2, 0.5) for t in G.TYPES)
+        return {"dist": dist, "loc": loc, "perm": perm}
+
+    pop = jax.vmap(jit_one)(jax.random.split(key, pop_size))
+    # slot the unperturbed seed in at index 0
+    pop = jax.tree.map(lambda a, s: a.at[0].set(s), pop, g_seed)
+    objs = O.evaluate_population(problem, pop)
+    return {"pop": pop, "objs": objs}
+
+
+def seed_cmaes(problem: Problem, g_seed: G.Genotype, key: jax.Array,
+               sigma0: float = 0.08):
+    """CMA-ES warm-start state centred on the migrated genotype."""
+    from repro.core import cmaes as C
+    mean0 = G.to_flat(problem, g_seed)
+    cfg = C.CMAESConfig(sigma0=sigma0)
+    return C.init_state(problem, key, cfg, mean0=mean0), cfg

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: causal flash attention (FA-2 schedule), GQA-aware.
+
+Layout targets the MXU: q tiles (BQ=128, D) x k tiles (BK=128, D) feed
+128x128 systolic matmuls; the online-softmax running state (m, l, acc) lives
+in VMEM scratch and is carried across the innermost kv-block grid axis
+(TPU sequential-grid guarantee).  GQA is handled in the index map: the kv
+block for query head h is h // group -- no KV replication in HBM.
+
+Supports: causal masking for self-attention (S == T) and chunked decode
+(S < T, queries are the last S positions), sliding-window masking
+(gemma3-style local layers), tail padding on both S and T.
+
+The backward pass is deliberately an XLA recompute (see ops.flash_attention):
+dq/dk/dv from the jnp reference under `jax.vjp`.  Numerics of record are
+ref.flash_attention_ref; tests sweep shapes/dtypes in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool, window: Optional[int],
+                s_real: int, t_real: int, bq: int, bk: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [BQ, BK]
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (t_real - s_real)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < t_real                                # tail padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)                      # <= 1, no NaN: both
+    p = jnp.exp(s - m_new[:, None])                      # finite via NEG_INF
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret",
+                                    "block_q", "block_k"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           interpret: bool = False,
+                           block_q: int = DEFAULT_BQ,
+                           block_k: int = DEFAULT_BK) -> jnp.ndarray:
+    """q: [B,H,S,D]; k,v: [B,Hkv,T,D] -> [B,H,S,D]."""
+    b, h, s_real, d = q.shape
+    hkv, t_real = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    bq = min(block_q, max(8, s_real))
+    bk = min(block_k, max(8, t_real))
+    ps = -s_real % bq
+    pt = -t_real % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    grid = (b, h, (s_real + ps) // bq, (t_real + pt) // bk)
+
+    kern = functools.partial(
+        _fwd_kernel, scale=1.0 / (d ** 0.5), causal=causal, window=window,
+        s_real=s_real, t_real=t_real, bq=bq, bk=bk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s_real, :]

@@ -1,0 +1,108 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+Policy: on TPU backends the Pallas kernels run compiled; everywhere else the
+`ref.py` oracles run (identical semantics, XLA-fused).  Setting
+``REPRO_PALLAS=interpret`` forces the Pallas path in interpret mode -- used by
+the test suite to execute the kernel bodies on CPU.
+
+`flash_attention` carries a custom VJP whose backward pass recomputes from
+the jnp reference -- the standard memory-saving flash recompute, keeping the
+fwd kernel and autodiff consistent by construction.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bbox as _bbox
+from repro.kernels import domination as _dom
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import wirelength as _wl
+from repro.kernels import xla_flash as _xf
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env == "interpret":
+        return "interpret"
+    if env == "ref":
+        return "ref"
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+def wirelength2(x1, y1, x2, y2, w) -> jnp.ndarray:
+    """[..., N] endpoint coords -> [...] fp32 (Eq. 1)."""
+    m = _mode()
+    if m == "ref":
+        return _ref.wirelength2_ref(x1, y1, x2, y2, w)
+    fn = functools.partial(_wl.wirelength2_pallas, interpret=(m == "interpret"))
+    if x1.ndim == 1:
+        return fn(*(a[None] for a in (x1, y1, x2, y2, w)))[0]
+    return fn(x1, y1, x2, y2, w)
+
+
+def maxbbox(ux, uy) -> jnp.ndarray:
+    """[..., U, B] unit-grouped coords -> [...] fp32 (Eq. 2)."""
+    m = _mode()
+    if m == "ref":
+        return _ref.maxbbox_ref(ux, uy)
+    fn = functools.partial(_bbox.maxbbox_pallas, interpret=(m == "interpret"))
+    if ux.ndim == 2:
+        return fn(ux[None], uy[None])[0]
+    return fn(ux, uy)
+
+
+def domination_matrix(objs: jnp.ndarray) -> jnp.ndarray:
+    """[P, M] objectives -> bool [P, P], minimisation domination."""
+    m = _mode()
+    if m == "ref" or objs.shape[-1] != 2:
+        return _ref.domination_ref(objs)
+    return _dom.domination_pallas(
+        objs, interpret=(m == "interpret")).astype(bool)
+
+
+# ------------------------------------------------------------- attention
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    logit_soft_cap: Optional[float] = None):
+    """q: [B,H,S,D]; k,v: [B,Hkv,T,D] -> [B,H,S,D]."""
+    m = _mode()
+    if logit_soft_cap is not None:
+        # soft-cap variant only exists on the ref path (none of the assigned
+        # archs enable it at the kernel level)
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        logit_soft_cap=logit_soft_cap)
+    if m == "ref":
+        # memory-bounded XLA path: never materialises [S, T]
+        return _xf.flash_attention_xla(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=(m == "interpret"))
+
+
+def _fa_fwd(q, k, v, causal, window, logit_soft_cap):
+    out = flash_attention(q, k, v, causal, window, logit_soft_cap)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, logit_soft_cap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window,
+            logit_soft_cap=logit_soft_cap), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len) -> jnp.ndarray:
+    """Single-token decode (no kernel: one GEMV per head, XLA path)."""
+    return _ref.decode_attention_ref(q, k_cache, v_cache, cache_len)

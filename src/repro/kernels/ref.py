@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each Pallas kernel's test sweeps shapes and
+dtypes and asserts allclose against the function here.  On CPU (this
+container, and any host without TPUs) `ops.py` dispatches to these directly,
+so the whole framework runs identically -- just without the VMEM tiling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------- EA objectives
+
+def wirelength2_ref(x1: jnp.ndarray, y1: jnp.ndarray, x2: jnp.ndarray,
+                    y2: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 1: sum_n ((|dx_n| + |dy_n|) * w_n)^2.
+
+    Inputs are per-net endpoint coordinates, shape [..., N]; reduces the last
+    axis.  fp32 accumulation.
+    """
+    dl = (jnp.abs(x1 - x2) + jnp.abs(y1 - y2)) * w
+    return jnp.sum(dl.astype(jnp.float32) ** 2, axis=-1)
+
+
+def net_lengths_ref(x1, y1, x2, y2) -> jnp.ndarray:
+    """Per-net Manhattan wirelength, shape-preserving (pipelining input)."""
+    return jnp.abs(x1 - x2) + jnp.abs(y1 - y2)
+
+
+def maxbbox_ref(ux: jnp.ndarray, uy: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 2: max_k BBoxSize(C_k), BBox = width + height.
+
+    ux, uy: [..., U, B] block coordinates grouped per conv unit; reduces the
+    last two axes to the max over units of (max-min)x + (max-min)y.
+    """
+    w = jnp.max(ux, axis=-1) - jnp.min(ux, axis=-1)
+    h = jnp.max(uy, axis=-1) - jnp.min(uy, axis=-1)
+    return jnp.max(w + h, axis=-1)
+
+
+def domination_ref(objs: jnp.ndarray) -> jnp.ndarray:
+    """Pareto domination matrix for minimisation.
+
+    objs: [P, M].  Returns bool [P, P]; out[i, j] == True iff i dominates j
+    (all objectives <=, at least one <).
+    """
+    a = objs[:, None, :]   # i
+    b = objs[None, :, :]   # j
+    return jnp.all(a <= b, axis=-1) & jnp.any(a < b, axis=-1)
+
+
+# ------------------------------------------------------------- attention
+
+def _gqa_expand(k: jnp.ndarray, n_q_heads: int) -> jnp.ndarray:
+    """[B, Hkv, T, D] -> [B, H, T, D] by repeating each KV head."""
+    b, hkv, t, d = k.shape
+    rep = n_q_heads // hkv
+    return jnp.repeat(k, rep, axis=1)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        logit_soft_cap: Optional[float] = None
+                        ) -> jnp.ndarray:
+    """Reference attention.  q: [B,H,S,D]; k,v: [B,Hkv,T,D] (GQA).
+
+    causal masking assumes queries are the *last* S positions of the T-long
+    key sequence (covers both self-attention S==T and decode S==1, T==cache).
+    `window` (if set) keeps only keys within `window` positions behind the
+    query (sliding-window attention, gemma3-style local layers).
+    """
+    orig_dtype = q.dtype
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    q_pos = jnp.arange(s) + (t - s)
+    k_pos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(orig_dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, cache_len: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Single-token decode attention against a (possibly padded) KV cache.
+
+    q: [B, H, D]; caches: [B, Hkv, T, D]; cache_len: [B] valid lengths.
+    """
+    b, h, d = q.shape
+    t = k_cache.shape[2]
+    k = _gqa_expand(k_cache, h).astype(jnp.float32)
+    v = _gqa_expand(v_cache, h).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), k) * scale
+    valid = jnp.arange(t)[None, :] < cache_len[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bht,bhtd->bhd", probs, v)
+    return out.astype(q.dtype)

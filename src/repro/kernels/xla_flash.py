@@ -1,0 +1,142 @@
+"""Memory-bounded flash attention in pure XLA (scan over KV blocks).
+
+This is the production attention path on non-TPU backends and the lowering
+used by the CPU dry-run: it never materialises the [S, T] score matrix --
+peak intermediate is [B, H, S, block_k] -- so 32k-token prefill compiles
+with sane memory_analysis numbers.  Semantics identical to
+`ref.flash_attention_ref` (tested); on TPU `ops.flash_attention` swaps in
+the Pallas kernel instead.
+
+`banded` is the sub-quadratic sliding-window variant: scan over *query*
+chunks, each attending only to its (window + block_q)-wide KV band via
+dynamic_slice -- FLOPs ~ S * window instead of S^2 (gemma3 local layers;
+see EXPERIMENTS.md SSPerf for the roofline delta it buys).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+# SSPerf hillclimb knobs (read once at import; dryrun sets them per cell):
+#   REPRO_FLASH_BLOCK_K : kv-block size of the online-softmax scan
+#   REPRO_FLASH_PV_BF16 : compute the p @ v inner product in bf16 (the
+#     [B,H,S,BK] probability tile is the dominant HBM tensor on the XLA
+#     path; bf16 halves its traffic, m/l stats stay fp32)
+ENV_BLOCK_K = int(os.environ.get("REPRO_FLASH_BLOCK_K", "512"))
+PV_BF16 = os.environ.get("REPRO_FLASH_PV_BF16", "0") == "1"
+
+
+def _gqa(h: int, hkv: int) -> int:
+    assert h % hkv == 0, (h, hkv)
+    return h // hkv
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_k"))
+def flash_attention_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: Optional[int] = None,
+                        block_k: int = ENV_BLOCK_K) -> jnp.ndarray:
+    """q: [B,H,S,D]; k,v: [B,Hkv,T,D] -> [B,H,S,D].  Online softmax over
+    KV blocks; checkpointed block body keeps bwd memory at one block."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = _gqa(h, hkv)
+    bk = min(block_k, t)
+    pt = -t % bk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    nblk = (t + pt) // bk
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(s) + (t - s)
+
+    # reshape kv blocks to scan over: [nblk, B, Hkv, bk, D]
+    kb = jnp.moveaxis(kp.reshape(b, hkv, nblk, bk, d), 2, 0)
+    vb = jnp.moveaxis(vp.reshape(b, hkv, nblk, bk, d), 2, 0)
+
+    @jax.checkpoint
+    def block(carry, inp):
+        m, l, acc = carry
+        jblk, kblk, vblk = inp
+        kx = jnp.repeat(kblk, g, axis=1).astype(jnp.float32)  # [B,H,bk,D]
+        vx = jnp.repeat(vblk, g, axis=1).astype(jnp.float32)
+        sc = jnp.einsum("bhsd,bhtd->bhst", qf, kx)
+        k_pos = jblk * bk + jnp.arange(bk)
+        mask = (k_pos < t)[None, :]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        sc = jnp.where(mask[None, None], sc, NEG)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if PV_BF16:
+            pv = jnp.einsum("bhst,bhtd->bhsd", p.astype(jnp.bfloat16),
+                            vx.astype(jnp.bfloat16)).astype(jnp.float32)
+        else:
+            pv = jnp.einsum("bhst,bhtd->bhsd", p, vx)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, s), NEG, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, h, s, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        block, init, (jnp.arange(nblk), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q"))
+def banded_attention_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         window: int, block_q: int = 512) -> jnp.ndarray:
+    """Causal sliding-window attention, sub-quadratic: each query chunk
+    attends a KV band of width (window - 1 + block_q) ending at its last
+    position.  Self-attention only (S == T)."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    assert s == t, "banded path is for self-attention"
+    g = _gqa(h, hkv)
+    bq = min(block_q, s)
+    ps = -s % bq
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    nblk = (s + ps) // bq
+    band = window - 1 + bq
+    # pad keys on the left so every band slice is in range
+    kp = jnp.pad(k, ((0, 0), (0, 0), (band, ps), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (band, ps), (0, 0)))
+    scale = 1.0 / (d ** 0.5)
+
+    qb = jnp.moveaxis(qp.reshape(b, h, nblk, bq, d), 2, 0)
+
+    @jax.checkpoint
+    def chunk(_, inp):
+        i, qblk = inp
+        # band covers absolute kv positions [i*bq + bq - 1 - (band-1), i*bq+bq)
+        start = i * bq + bq - 1 - (band - 1) + band   # index into padded kp
+        kband = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=2)
+        vband = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=2)
+        kx = jnp.repeat(kband, g, axis=1).astype(jnp.float32)
+        vx = jnp.repeat(vband, g, axis=1).astype(jnp.float32)
+        sc = jnp.einsum("bhsd,bhtd->bhst",
+                        qblk.astype(jnp.float32) * scale, kx)
+        q_pos = i * bq + jnp.arange(bq)
+        k_pos = (start - band) + jnp.arange(band)
+        mask = ((k_pos[None, :] <= q_pos[:, None])
+                & (k_pos[None, :] > q_pos[:, None] - window)
+                & (k_pos[None, :] >= 0) & (q_pos[:, None] < s))
+        sc = jnp.where(mask[None, None], sc, NEG)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhst,bhtd->bhsd", p, vx)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(chunk, None, (jnp.arange(nblk), qb))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, s + ps, d)
+    return out[:, :, :s]

@@ -1,0 +1,25 @@
+"""Production mesh construction (single-pod 16x16 / multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count locks on first backend init, and
+only launch/dryrun.py is allowed to force the 512-device host platform).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has, split (data, model) -- tests/examples."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,52 @@
+"""Serving launcher: reduced-config engine locally, full config via dry-run.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --dry-run
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape,
+               "--out", "experiments/dryrun"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.run(cmd, env={
+            "PYTHONPATH": "src", **os.environ}).returncode)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_arch, get_reduced
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine
+
+    cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = Engine(cfg, params, n_slots=max(2, args.requests // 2),
+                 max_len=96, eos_id=-1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(4, 10))
+               .astype(np.int32) for _ in range(args.requests)]
+    for i, toks in eng.generate(prompts, max_new=args.max_new).items():
+        print(f"req{i}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b \
+        [--steps 100] [--ckpt-dir ...] [--dry-run]
+
+On real hardware this drives the production mesh; on this CPU container use
+--dry-run (lower+compile only, same path as launch.dryrun) or a reduced
+config (--reduced) for an actually-executing loop.  Fault tolerance knobs
+(checkpoint cadence, failure injection) ride on train.trainer.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="run the family-preserving reduced config")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the full config on the 16x16 mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # delegate to the dry-run in a fresh interpreter: the 512-device
+        # flag must be set before jax initialises
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k",
+               "--out", "experiments/dryrun"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.run(cmd, env={
+            "PYTHONPATH": "src", **os.environ}).returncode)
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, get_reduced
+    from repro.data.pipeline import DataConfig
+    from repro.train import optimizer as opt
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    tr = Trainer(
+        cfg,
+        opt.OptConfig(lr=3e-4, warmup_steps=min(20, args.steps // 5 + 1),
+                      total_steps=args.steps),
+        TrainerConfig(steps=args.steps, ckpt_every=max(args.steps // 4, 10),
+                      ckpt_dir=args.ckpt_dir, log_every=10,
+                      param_dtype=jnp.float32),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch),
+    )
+    for h in tr.run_with_recovery():
+        print(h)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Attention layers: GQA + RoPE, sliding-window locals, KV-cache decode.
+
+Sharding strategy (resolved per-arch by `sharding.logical` rules):
+  * train/prefill: Q/K/V projections sharded on the flattened head dim
+    ("q_flat"/"kv_flat" -> model axis; divides for every assigned arch,
+    including llava's 56 heads where per-head sharding is impossible);
+    attention compute shards over heads when divisible, else GSPMD falls
+    back per the constraint propagation.
+  * decode: the KV cache is *sequence*-sharded over the model axis
+    ("kv_seq" rule) and merged with a log-sum-exp psum -- the flash-decoding
+    split-KV scheme.  This sidesteps GQA head-divisibility entirely and
+    scales cache memory 1/model_parallelism; one token's K/V is written by
+    exactly the owning shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.models import modules as nn
+from repro.sharding import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnArgs:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None     # sliding-window size for local layers
+    # head padding (SSPerf): physical head counts rounded up so they divide
+    # the model axis (llava: 56 -> 64 q, 8 -> 16 kv).  Padded heads are
+    # hard-masked to zero after attention, so the model function is exactly
+    # the unpadded one (zero output -> zero gradient into padded weights).
+    pad_q_heads: int = 0
+    pad_kv_heads: int = 0
+
+    @property
+    def hq(self) -> int:
+        return self.pad_q_heads or self.n_heads
+
+    @property
+    def hkv(self) -> int:
+        return self.pad_kv_heads or self.n_kv_heads
+
+
+def specs(a: AttnArgs) -> Dict[str, nn.ParamSpec]:
+    return {
+        "wq": nn.dense_spec(a.d_model, a.hq * a.d_head,
+                            ("embed", "q_flat")),
+        "wk": nn.dense_spec(a.d_model, a.hkv * a.d_head,
+                            ("embed", "kv_flat")),
+        "wv": nn.dense_spec(a.d_model, a.hkv * a.d_head,
+                            ("embed", "kv_flat")),
+        "wo": nn.dense_spec(a.hq * a.d_head, a.d_model,
+                            ("q_flat", "embed")),
+    }
+
+
+def _project_qkv(p, a: AttnArgs, x: jnp.ndarray, positions: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,d] -> q [B,S,Hq,dh], k/v [B,S,Hkv,dh] with RoPE applied."""
+    b, s, _ = x.shape
+    q = nn.dense(x, p["wq"])
+    k = nn.dense(x, p["wk"])
+    v = nn.dense(x, p["wv"])
+    q = logical.constrain(q, "batch", "seq", "q_flat")
+    k = logical.constrain(k, "batch", "seq", "kv_flat")
+    v = logical.constrain(v, "batch", "seq", "kv_flat")
+    q = q.reshape(b, s, a.hq, a.d_head)
+    k = k.reshape(b, s, a.hkv, a.d_head)
+    v = v.reshape(b, s, a.hkv, a.d_head)
+    q = nn.rope(q, positions, a.rope_theta)
+    k = nn.rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def _mask_padded(a: AttnArgs, out_heads: jnp.ndarray) -> jnp.ndarray:
+    """Zero the padded heads' outputs ([..., H, dh] layout, H on axis -2)."""
+    if a.hq == a.n_heads:
+        return out_heads
+    mask = (jnp.arange(a.hq) < a.n_heads).astype(out_heads.dtype)
+    return out_heads * mask[..., :, None]
+
+
+# sliding-window layers switch to the sub-quadratic banded path when the
+# window is much shorter than the sequence (toggle = SSPerf ablation lever)
+import os as _os  # noqa: E402
+
+USE_BANDED = _os.environ.get("REPRO_BANDED", "1") == "1"
+
+
+def _attend_full(a: AttnArgs, qt, kt, vt):
+    s, t = qt.shape[2], kt.shape[2]
+    if (USE_BANDED and a.window is not None and s == t
+            and s >= 4 * a.window):
+        from repro.kernels import xla_flash
+        return xla_flash.banded_attention_xla(qt, kt, vt, a.window)
+    return ops.flash_attention(qt, kt, vt, True, a.window, None)
+
+
+def _heads_shardable(a: AttnArgs) -> bool:
+    ctx = logical.current()
+    if ctx is None:
+        return True
+    spec = logical.spec_for(("heads",), (a.n_heads,), *ctx)
+    return spec[0] is not None
+
+
+def apply(p, a: AttnArgs, x: jnp.ndarray,
+          positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence causal attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, a, x, positions)
+    qt = jnp.swapaxes(q, 1, 2)          # [B,H,S,dh]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    # NOTE(SSPerf, refuted): forcing query-sequence sharding with whole K/V
+    # here quadrupled collective time on llava (full K/V all-gathered per
+    # layer); the winning layout is data-parallel attention with replicated
+    # (FSDP-gathered) attention weights -- a *rules* choice, not a constraint
+    # (see EXPERIMENTS.md SSPerf llava iterations).
+    qt = logical.constrain(qt, "batch", "heads", "seq", "head")
+    out = _attend_full(a, qt, kt, vt)
+    out = _mask_padded(a, jnp.swapaxes(out, 1, 2))
+    out = out.reshape(b, s, a.hq * a.d_head)
+    out = logical.constrain(out, "batch", "seq", "q_flat")
+    return nn.dense(out, p["wo"])
+
+
+def apply_and_cache(p, a: AttnArgs, x: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prefill: attention output + KV cache [B,Hkv,S,dh] (seq-shardable)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, a, x, positions)
+    qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    out = _attend_full(a, qt, kt, vt)
+    out = _mask_padded(a, jnp.swapaxes(out, 1, 2))
+    out = out.reshape(b, s, a.hq * a.d_head)
+    y = nn.dense(out, p["wo"])
+    cache = {
+        "k": logical.constrain(kt, "batch", "kv_heads", "kv_seq", "head"),
+        "v": logical.constrain(vt, "batch", "kv_heads", "kv_seq", "head"),
+    }
+    return y, cache
+
+
+# ------------------------------------------------------------------ decode
+
+def _local_decode_attend(q, kc, vc, cache_len, base, window, t_total):
+    """Partial (unnormalised) attention of one KV shard.
+
+    q: [B,H,dh]; kc/vc: [B,Hkv,Tl,dh] local shard covering absolute
+    positions [base, base+Tl); returns (m, l, o) for LSE merging.
+    """
+    b, h, d = q.shape
+    hkv, tl = kc.shape[1], kc.shape[2]
+    g = h // hkv
+    kx = jnp.repeat(kc, g, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(vc, g, axis=1).astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32) * scale, kx)
+    pos = base + jnp.arange(tl)[None, :]                      # [1, Tl]
+    valid = pos < cache_len[:, None]                          # [B, Tl]
+    if window is not None:
+        valid = valid & (pos > cache_len[:, None] - 1 - window)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)                              # [B,H]
+    msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+    pr = jnp.where(jnp.isfinite(logits), jnp.exp(logits - msafe[..., None]),
+                   0.0)
+    l = jnp.sum(pr, axis=-1)
+    o = jnp.einsum("bht,bhtd->bhd", pr, vx)
+    m = jnp.where(jnp.isfinite(m), m, -1e30)
+    return m, l, o
+
+
+def decode_step(p, a: AttnArgs, x1: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                cache_len: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode.  x1: [B,1,d]; cache k/v: [B,Hkv,T,dh];
+    cache_len: [B] (current filled length; new token lands at cache_len).
+
+    With an active mesh whose "kv_seq" rule shards the cache sequence, runs
+    the shard_map split-KV scheme; otherwise a single-device path.
+    """
+    b = x1.shape[0]
+    positions = cache_len[:, None]
+    q, k1, v1 = _project_qkv(p, a, x1, positions)
+    q1 = q[:, 0]                                   # [B,H,dh]
+    k1 = jnp.swapaxes(k1, 1, 2)                    # [B,Hkv,1,dh]
+    v1 = jnp.swapaxes(v1, 1, 2)
+
+    ctx = logical.current()
+    t_total = cache["k"].shape[2]
+    if ctx is not None:
+        mesh, rules = ctx
+        kv_axes = rules.get("kv_seq")
+        shards = logical._axes_size(mesh, kv_axes) if kv_axes else 1
+    else:
+        mesh, rules, kv_axes, shards = None, None, None, 1
+
+    if shards > 1 and t_total % shards == 0:
+        axes = (kv_axes,) if isinstance(kv_axes, str) else tuple(kv_axes)
+        axes = tuple(ax for ax in axes if ax in mesh.shape)
+        # batch stays sharded over its own axes (disjoint from kv_seq)
+        b_ax = rules.get("batch")
+        b_ax = ((b_ax,) if isinstance(b_ax, str) else tuple(b_ax or ()))
+        b_ax = tuple(ax for ax in b_ax
+                     if ax in mesh.shape and ax not in axes
+                     and b % mesh.shape[ax] == 0)
+        bspec = b_ax if len(b_ax) > 1 else (b_ax[0] if b_ax else None)
+        kvspec = axes if len(axes) > 1 else axes[0]
+        cache_spec = P(bspec, None, kvspec, None)
+        repl = P(bspec, None, None)
+
+        def shard_fn(q1s, k1s, v1s, kc, vc, clen):
+            tl = kc.shape[2]
+            idx = jnp.int32(0)
+            for ax in axes:                     # row-major linear shard index
+                idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+            base = idx * tl
+            # write the new token into the owning shard only
+            local_pos = clen - base                           # [B]
+            own = (local_pos >= 0) & (local_pos < tl)
+            posmask = ((jnp.arange(tl)[None, :] == local_pos[:, None])
+                       & own[:, None])                        # [B, Tl]
+            kc = jnp.where(posmask[:, None, :, None],
+                           jnp.broadcast_to(k1s, kc.shape), kc)
+            vc = jnp.where(posmask[:, None, :, None],
+                           jnp.broadcast_to(v1s, vc.shape), vc)
+            new_len = clen + 1
+            m, l, o = _local_decode_attend(
+                q1s, kc, vc, new_len, base, a.window, t_total)
+            mg = jax.lax.pmax(m, axes)
+            corr = jnp.exp(m - mg)
+            lg = jax.lax.psum(l * corr, axes)
+            og = jax.lax.psum(o * corr[..., None], axes)
+            out = og / jnp.maximum(lg, 1e-30)[..., None]
+            return out.astype(x1.dtype), kc, vc
+
+        out, kc, vc = jax.shard_map(
+            shard_fn, mesh=mesh, check_vma=False,
+            in_specs=(repl, P(bspec, None, None, None),
+                      P(bspec, None, None, None), cache_spec, cache_spec,
+                      P(bspec)),
+            out_specs=(repl, cache_spec, cache_spec),
+        )(q1, k1, v1, cache["k"], cache["v"], cache_len)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        posmask = jnp.arange(t_total)[None, :] == cache_len[:, None]
+        kc = jnp.where(posmask[:, None, :, None],
+                       jnp.broadcast_to(k1, cache["k"].shape), cache["k"])
+        vc = jnp.where(posmask[:, None, :, None],
+                       jnp.broadcast_to(v1, cache["v"].shape), cache["v"])
+        m, l, o = _local_decode_attend(
+            q1, kc, vc, cache_len + 1, 0, a.window, t_total)
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(x1.dtype)
+        new_cache = {"k": kc, "v": vc}
+
+    out = _mask_padded(a, out)                     # [B,Hq,dh]
+    y = nn.dense(out.reshape(b, 1, a.hq * a.d_head), p["wo"])
+    return y, new_cache

@@ -1,0 +1,146 @@
+"""Mamba (S6) selective-state-space block for the jamba hybrid.
+
+TPU-adapted selective scan: instead of the CUDA fused kernel, the recurrence
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(dt_t * A),  b_t = dt_t * B_t * u_t
+runs as an outer `lax.scan` over sequence *chunks* with an inner associative
+scan inside each chunk -- the [B, S, d_inner, d_state] discretised tensor is
+never materialised beyond one chunk (HBM-bounded, remat-friendly), which is
+the part of the original kernel's job that matters on TPU.
+
+Decode is the O(1) single-step update on carried state
+(conv window + SSM state) -- why jamba runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.sharding import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaArgs:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 -> ceil(d_model / 16)
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def specs(a: MambaArgs) -> Dict[str, nn.ParamSpec]:
+    di = a.d_inner
+    return {
+        "in_proj": nn.dense_spec(a.d_model, 2 * di, ("embed", "ssm_inner")),
+        "conv_w": nn.ParamSpec((a.d_conv, di), (None, "ssm_inner"),
+                               "normal", 0.5),
+        "conv_b": nn.ParamSpec((di,), ("ssm_inner",), "zeros"),
+        "x_proj": nn.dense_spec(di, a.rank + 2 * a.d_state,
+                                ("ssm_inner", None)),
+        "dt_proj": nn.dense_spec(a.rank, di, (None, "ssm_inner")),
+        "dt_bias": nn.ParamSpec((di,), ("ssm_inner",), "const", 0.1),
+        "a_log": nn.ParamSpec((di, a.d_state), ("ssm_inner", "ssm_state"),
+                              "const", 0.0),
+        "d_skip": nn.ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": nn.dense_spec(di, a.d_model, ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv along seq.  u: [B,S,di]; w: [K,di]."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssm_params(p, a: MambaArgs, u: jnp.ndarray):
+    """u: [..., di] -> (dt [...,di], Bc [...,ds], Cc [...,ds])."""
+    z = nn.dense(u, p["x_proj"])
+    dt, bc, cc = jnp.split(z, [a.rank, a.rank + a.d_state], axis=-1)
+    dt = jax.nn.softplus(nn.dense(dt, p["dt_proj"])
+                         + p["dt_bias"].astype(u.dtype))
+    return dt, bc, cc
+
+
+def apply(p, a: MambaArgs, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence training/prefill pass.  x: [B,S,d]."""
+    bsz, s, _ = x.shape
+    xz = nn.dense(x, p["in_proj"])
+    u, gate = jnp.split(xz, 2, axis=-1)                    # [B,S,di]
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    u = logical.constrain(u, "batch", "seq", "ssm_inner")
+
+    ch = min(a.chunk, s)
+    assert s % ch == 0, (s, ch)
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))       # [di, ds]
+
+    uc = jnp.moveaxis(u.reshape(bsz, s // ch, ch, -1), 1, 0)
+
+    @jax.checkpoint
+    def chunk_body(h, u_ch):
+        # u_ch: [B, ch, di]; h: [B, di, ds] fp32
+        dt, bc, cc = _ssm_params(p, a, u_ch)
+        dtf = dt.astype(jnp.float32)
+        ea = jnp.exp(dtf[..., None] * a_mat[None, None])   # [B,ch,di,ds]
+        bu = (dtf * u_ch.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[..., None, :]          # [B,ch,di,ds]
+
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        ea_s, bu_s = jax.lax.associative_scan(comb, (ea, bu), axis=1)
+        hs = ea_s * h[:, None] + bu_s                      # [B,ch,di,ds]
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc.astype(jnp.float32))
+        y = y + p["d_skip"].astype(jnp.float32) * u_ch.astype(jnp.float32)
+        return hs[:, -1], y.astype(x.dtype)
+
+    h0 = jnp.zeros((bsz, a.d_inner, a.d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, uc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, a.d_inner)
+    y = y * jax.nn.silu(gate)
+    return nn.dense(y, p["out_proj"])
+
+
+def init_cache(a: MambaArgs, batch: int, dtype=jnp.float32
+               ) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, a.d_conv - 1, a.d_inner), dtype),
+        "h": jnp.zeros((batch, a.d_inner, a.d_state), jnp.float32),
+    }
+
+
+def decode_step(p, a: MambaArgs, x1: jnp.ndarray, cache: Dict
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """O(1) decode.  x1: [B,1,d]."""
+    xz = nn.dense(x1[:, 0], p["in_proj"])
+    u, gate = jnp.split(xz, 2, axis=-1)                    # [B,di]
+    win = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # [B,K,di]
+    conv = jnp.einsum("bkd,kd->bd", win, p["conv_w"].astype(u.dtype)) \
+        + p["conv_b"].astype(u.dtype)
+    u = jax.nn.silu(conv)
+    dt, bc, cc = _ssm_params(p, a, u)
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))
+    ea = jnp.exp(dt.astype(jnp.float32)[..., None] * a_mat[None])
+    bu = (dt * u)[..., None].astype(jnp.float32) \
+        * bc.astype(jnp.float32)[:, None, :]
+    h = ea * cache["h"] + bu
+    y = jnp.einsum("bds,bs->bd", h, cc.astype(jnp.float32)) \
+        + p["d_skip"].astype(jnp.float32) * u.astype(jnp.float32)
+    y = (y.astype(x1.dtype) * jax.nn.silu(gate))
+    out = nn.dense(y, p["out_proj"])[:, None, :]
+    return out, {"conv": win[:, 1:], "h": h}

@@ -1,0 +1,22 @@
+"""Dense SwiGLU MLP (llama-family FFN used by every dense assigned arch)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.sharding import logical
+
+
+def specs(d_model: int, d_ff: int) -> Dict[str, nn.ParamSpec]:
+    return {
+        "wg": nn.dense_spec(d_model, d_ff, ("embed", "mlp")),
+        "wu": nn.dense_spec(d_model, d_ff, ("embed", "mlp")),
+        "wd": nn.dense_spec(d_ff, d_model, ("mlp", "embed")),
+    }
+
+
+def apply(p, x: jnp.ndarray) -> jnp.ndarray:
+    h = nn.swiglu(x, p["wg"], p["wu"], p["wd"])
+    return logical.constrain(h, "batch", "seq", "embed")

@@ -1,0 +1,127 @@
+"""Minimal functional module system: params as pytrees, specs as trees.
+
+No flax/haiku on this box, and a framework should own its parameter story
+anyway: a model is described once as a tree of `ParamSpec`s (shape + logical
+sharding axes + initializer); `init_tree` realises it into arrays (per-leaf
+deterministic keys from the tree path) and `axes_tree` extracts the logical
+axis signature consumed by `repro.sharding.logical`.
+
+Apply-side helpers (rmsnorm, dense, rope) are plain functions over the
+realised params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Axes                       # logical sharding axes, len == ndim
+    init: str = "normal"             # normal | zeros | ones | const
+    scale: float = 1.0               # stddev for normal / value for const
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def dense_spec(d_in: int, d_out: int, axes: Axes,
+               scale: Optional[float] = None) -> ParamSpec:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return ParamSpec((d_in, d_out), axes, "normal", s)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_tree(specs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Realise a ParamSpec tree; every leaf gets a path-derived key."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    paths = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)[0]
+    out = []
+    for (path, spec) in paths:
+        pkey = jax.random.fold_in(key, hash(jax.tree_util.keystr(path))
+                                  % (2 ** 31))
+        if spec.init == "normal":
+            a = jax.random.normal(pkey, spec.shape, jnp.float32) * spec.scale
+        elif spec.init == "zeros":
+            a = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            a = jnp.ones(spec.shape, jnp.float32)
+        elif spec.init == "const":
+            a = jnp.full(spec.shape, spec.scale, jnp.float32)
+        else:
+            raise ValueError(spec.init)
+        out.append(a.astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(specs: Any) -> Any:
+    """ParamSpec tree -> tree of logical-axis tuples (same structure)."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def shape_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        specs, is_leaf=_is_spec)
+
+
+def param_count(specs: Any) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+# ------------------------------------------------------------- apply-side
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray,
+            eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)
+            ).astype(dt)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, D] (D even); positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                           # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+           wd: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(dense(x, wg)) * dense(x, wu)
+    return dense(h, wd)
+
+
+def softmax_xent(logits: jnp.ndarray, targets: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean masked token cross-entropy; fp32 logsumexp (vocab may be
+    model-sharded: GSPMD turns the reductions into psums)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts layer: shared + fine-grained routed experts.
+
+Covers deepseek-moe (2 shared + 64 routed top-6), qwen2-moe (4 shared + 60
+routed top-4, padded to 64 so expert-parallelism divides the model axis;
+padded experts are router-masked), and jamba's 16-expert top-2 layers.
+
+Two execution paths:
+  * `reference` (no mesh): every expert computed densely, gathered by gate --
+    exact, O(E) FLOPs, used by the CPU smoke tests with tiny expert counts.
+  * `expert-parallel` (active mesh): shard_map over the model axis.  Tokens
+    are replicated across the EP axis (they arrive batch-sharded over
+    data/pod); each shard owns E/ep experts, builds a capacity-bounded
+    dispatch buffer [E_loc, C, d] with a sorted-rank scatter, runs its
+    experts, scatters contributions back weighted by the gates and psums
+    over the EP axis.  Capacity overflow drops tokens (standard GShard
+    semantics); aux load-balance loss keeps the router honest.
+
+The expert->mesh-axis assignment is the placement decision `core.autoshard`
+optimizes -- experts are the closest analogue of the paper's hard blocks
+(DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import modules as nn
+from repro.sharding import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEArgs:
+    d_model: int
+    n_routed: int                 # logical routed experts (pre-padding)
+    top_k: int
+    d_expert: int                 # per-expert FFN width (fine-grained)
+    n_shared: int = 0
+    n_padded: int = 0             # physical experts incl. padding (>= routed)
+    capacity_factor: float = 1.25
+    aux_weight: float = 0.01
+
+    @property
+    def e_phys(self) -> int:
+        return max(self.n_padded, self.n_routed)
+
+
+def specs(a: MoEArgs) -> Dict[str, nn.ParamSpec]:
+    e = a.e_phys
+    s: Dict[str, nn.ParamSpec] = {
+        "router": nn.dense_spec(a.d_model, e, ("embed", None), scale=0.02),
+        "wg": nn.ParamSpec((e, a.d_model, a.d_expert),
+                           ("experts", "embed", "expert_mlp"), "normal",
+                           1.0 / (a.d_model ** 0.5)),
+        "wu": nn.ParamSpec((e, a.d_model, a.d_expert),
+                           ("experts", "embed", "expert_mlp"), "normal",
+                           1.0 / (a.d_model ** 0.5)),
+        "wd": nn.ParamSpec((e, a.d_expert, a.d_model),
+                           ("experts", "expert_mlp", "embed"), "normal",
+                           1.0 / (a.d_expert ** 0.5)),
+    }
+    if a.n_shared:
+        s["shared"] = {
+            "wg": nn.dense_spec(a.d_model, a.n_shared * a.d_expert,
+                                ("embed", "mlp")),
+            "wu": nn.dense_spec(a.d_model, a.n_shared * a.d_expert,
+                                ("embed", "mlp")),
+            "wd": nn.dense_spec(a.n_shared * a.d_expert, a.d_model,
+                                ("mlp", "embed")),
+        }
+    return s
+
+
+def _route(p, a: MoEArgs, xf: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """xf: [T, d] -> (top-k indices [T,k], gates [T,k], aux loss)."""
+    logits = nn.dense(xf.astype(jnp.float32), p["router"])
+    if a.e_phys > a.n_routed:                       # mask padded experts
+        pad = jnp.arange(a.e_phys) >= a.n_routed
+        logits = jnp.where(pad[None, :], -1e30, logits)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    gates, inds = jax.lax.top_k(gates_full, a.top_k)
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load balance aux: E * sum_e f_e * p_e
+    t = xf.shape[0]
+    onehot = jax.nn.one_hot(inds, a.e_phys, dtype=jnp.float32)  # [T,k,E]
+    f = jnp.sum(onehot, axis=(0, 1)) / (t * a.top_k)
+    pbar = jnp.mean(gates_full, axis=0)
+    aux = a.aux_weight * a.n_routed * jnp.sum(f * pbar)
+    return inds, gates.astype(xf.dtype), aux
+
+
+def _expert_ffn(wg, wu, wd, buf: jnp.ndarray) -> jnp.ndarray:
+    """buf: [E_loc, C, d] -> [E_loc, C, d] (per-expert SwiGLU)."""
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype)))
+         * jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype)))
+    return jnp.einsum("ecf,efd->ecd", h, wd.astype(buf.dtype))
+
+
+def _apply_reference(p, a: MoEArgs, xf: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    inds, gates, aux = _route(p, a, xf)
+    # dense: run every expert on every token, gather by gate (tests only)
+    h = (jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"].astype(xf.dtype)))
+         * jnp.einsum("td,edf->tef", xf, p["wu"].astype(xf.dtype)))
+    y_all = jnp.einsum("tef,efd->ted", h, p["wd"].astype(xf.dtype))
+    sel = jnp.take_along_axis(y_all, inds[:, :, None], axis=1)  # [T,k,d]
+    return jnp.sum(sel * gates[:, :, None], axis=1), aux
+
+
+def _ranks_by_expert(flat_e: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Position of each (token,k) within its expert's arrival order."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros(e, jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[flat_e[order]]
+    return jnp.zeros(n, jnp.int32).at[order].set(rank_sorted)
+
+
+def _apply_ep(p, a: MoEArgs, xf: jnp.ndarray, mesh, rules
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ep_axes = rules.get("experts") or "model"
+    ep_axes = (ep_axes,) if isinstance(ep_axes, str) else tuple(ep_axes)
+    ep = logical._axes_size(mesh, ep_axes)
+    e = a.e_phys
+    if ep <= 1 or e % ep != 0:
+        return _apply_reference(p, a, xf)
+    e_loc = e // ep
+    t = xf.shape[0]
+    # tokens replicated over EP axis; batch axes handled outside
+    batch_axes = rules.get("batch")
+    bspec = P(batch_axes, None)
+    t_loc = t // logical._axes_size(mesh, batch_axes)
+    cap = int(a.capacity_factor * a.top_k * t_loc / e) + 1
+
+    def shard_fn(xs, router, wg, wu, wd):
+        inds, gates, aux = _route({"router": router}, a, xs)  # [Tl,k]
+        flat_e = inds.reshape(-1)
+        ranks = _ranks_by_expert(flat_e, e)
+        idx = jnp.int32(0)
+        for ax in ep_axes:
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        e0 = idx * e_loc
+        mine = (flat_e >= e0) & (flat_e < e0 + e_loc) & (ranks < cap)
+        slot = jnp.where(mine, (flat_e - e0) * cap + ranks, e_loc * cap)
+        tok = jnp.repeat(jnp.arange(xs.shape[0]), a.top_k)
+        buf = jnp.zeros((e_loc * cap + 1, xs.shape[1]), xs.dtype)
+        buf = buf.at[slot].add(xs[tok] * mine[:, None].astype(xs.dtype))
+        yb = _expert_ffn(wg, wu, wd,
+                         buf[:-1].reshape(e_loc, cap, xs.shape[1]))
+        yb = jnp.concatenate(
+            [yb.reshape(e_loc * cap, xs.shape[1]),
+             jnp.zeros((1, xs.shape[1]), xs.dtype)])
+        contrib = yb[slot] * (gates.reshape(-1, 1)
+                              * mine[:, None].astype(xs.dtype))
+        y = jnp.sum(contrib.reshape(xs.shape[0], a.top_k, -1), axis=1)
+        y = jax.lax.psum(y, ep_axes)
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))  # replicated scalar
+        return y, aux
+
+    wspec3 = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
+    y, aux = jax.shard_map(
+        shard_fn, mesh=mesh, check_vma=False,
+        in_specs=(bspec, P(None, None), wspec3, wspec3, wspec3),
+        out_specs=(bspec, P()),
+    )(xf, p["router"], p["wg"], p["wu"], p["wd"])
+    return y, aux
+
+
+def apply(p, a: MoEArgs, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,d] -> (y [B,S,d], aux scalar)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    ctx = logical.current()
+    if ctx is None:
+        y, aux = _apply_reference(p, a, xf)
+    else:
+        y, aux = _apply_ep(p, a, xf, ctx[0], ctx[1])
+    y = y.reshape(b, s, d)
+    if a.n_shared:
+        sh = p["shared"]
+        y = y + nn.swiglu(x, sh["wg"], sh["wu"], sh["wd"])
+    return logical.constrain(y, "batch", "seq", "embed"), aux

@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" block: attention-free, data-dependent decay recurrence.
+
+Faithful to the headline mechanism of arXiv:2404.05892: per-channel decays
+w_t are *functions of the input* (low-rank MLP), the WKV state is a per-head
+[dh, dh] outer-product accumulator
+
+    wkv_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+plus token-shift mixing and the squared-ReLU channel-mix FFN.  The receptance
+/key/value/gate mixing coefficients use static learned mus (the LoRA ddlerp
+refinement of the paper is folded into the decay path, which is the part
+that carries the "data-dependent decay" contribution).
+
+Training/prefill scans the sequence (state [B,H,dh,dh] is the only carry);
+decode is O(1) per token with no KV cache -- hence rwkv6 runs long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# SSPerf knob: carry the WKV state in bf16 (halves the dominant HBM tensor
+# of the training scan; decay products stay fp32 for stability)
+STATE_BF16 = os.environ.get("REPRO_RWKV_STATE_BF16", "0") == "1"
+
+from repro.models import modules as nn
+from repro.sharding import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVArgs:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    decay_rank: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def specs(a: RWKVArgs) -> Dict[str, nn.ParamSpec]:
+    d = a.d_model
+    return {
+        "ln1": nn.ParamSpec((d,), ("embed",), "ones"),
+        "ln2": nn.ParamSpec((d,), ("embed",), "ones"),
+        "tm": {  # time-mix
+            "mu_r": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "mu_k": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "mu_v": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "mu_g": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "mu_w": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "wr": nn.dense_spec(d, d, ("embed", "q_flat")),
+            "wk": nn.dense_spec(d, d, ("embed", "q_flat")),
+            "wv": nn.dense_spec(d, d, ("embed", "q_flat")),
+            "wg": nn.dense_spec(d, d, ("embed", "q_flat")),
+            "wo": nn.dense_spec(d, d, ("q_flat", "embed")),
+            # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+            "w0": nn.ParamSpec((d,), ("embed",), "const", -0.6),
+            "wa": nn.dense_spec(d, a.decay_rank, ("embed", None), 0.01),
+            "wb": nn.dense_spec(a.decay_rank, d, (None, "embed"), 0.01),
+            "u": nn.ParamSpec((d,), ("embed",), "const", 0.3),  # bonus
+        },
+        "cm": {  # channel-mix
+            "mu_r": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "mu_k": nn.ParamSpec((d,), ("embed",), "const", 0.5),
+            "wr": nn.dense_spec(d, d, ("embed", None)),
+            "wk": nn.dense_spec(d, a.d_ff, ("embed", "mlp")),
+            "wv": nn.dense_spec(a.d_ff, d, ("mlp", "embed")),
+        },
+    }
+
+
+def _shift(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _chunk_size(s: int, target: int = 64) -> int:
+    """Largest divisor of s not exceeding target."""
+    ch = min(target, s)
+    while s % ch:
+        ch -= 1
+    return ch
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)[None, None, :]
+
+
+def _decay(tm, xw: jnp.ndarray) -> jnp.ndarray:
+    dd = nn.dense(jnp.tanh(nn.dense(xw, tm["wa"])), tm["wb"])
+    return jnp.exp(-jnp.exp(
+        tm["w0"].astype(jnp.float32)[None, None] + dd.astype(jnp.float32)))
+
+
+def _heads(x: jnp.ndarray, h: int, dh: int) -> jnp.ndarray:
+    return x.reshape(*x.shape[:-1], h, dh)
+
+
+def time_mix(tm, a: RWKVArgs, x: jnp.ndarray,
+             state: jnp.ndarray, x_last: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,d]; state: [B,H,dh,dh] fp32; x_last: [B,d] (shift carry).
+    Returns (out, new_state, new_x_last)."""
+    b, s, d = x.shape
+    h, dh = a.n_heads, a.head_dim
+    xprev = _shift(x).at[:, 0].set(x_last.astype(x.dtype))
+    r = _heads(nn.dense(_mix(x, xprev, tm["mu_r"]), tm["wr"]), h, dh)
+    k = _heads(nn.dense(_mix(x, xprev, tm["mu_k"]), tm["wk"]), h, dh)
+    v = _heads(nn.dense(_mix(x, xprev, tm["mu_v"]), tm["wv"]), h, dh)
+    g = nn.dense(_mix(x, xprev, tm["mu_g"]), tm["wg"])
+    w = _heads(_decay(tm, _mix(x, xprev, tm["mu_w"])), h, dh)  # [B,S,H,dh]
+    u = _heads(tm["u"].astype(jnp.float32), h, dh)             # [H,dh]
+
+    sdt = jnp.bfloat16 if STATE_BF16 else jnp.float32
+    rf = r.astype(sdt)
+    kf = k.astype(sdt)
+    vf = v.astype(sdt)
+    state = state.astype(sdt)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                # [B,H,dh]
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,dh,dh]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + (u[None][..., None]
+                                                   .astype(sdt) * kv))
+        S = wt.astype(sdt)[..., None] * S + kv
+        return S, out
+
+    # chunked double scan: the checkpointed outer scan keeps only chunk-
+    # boundary WKV states for the backward pass (a 4k-step single scan
+    # would otherwise stash a [B,H,dh,dh] state per *token*)
+    ch = _chunk_size(s)
+    seq_first = lambda t: jnp.moveaxis(t, 1, 0).reshape(
+        (s // ch, ch) + t.shape[0:1] + t.shape[2:])         # [n,ch,B,H,dh]
+    xs = (seq_first(rf), seq_first(kf), seq_first(vf), seq_first(w))
+
+    @jax.checkpoint
+    def chunk(S, inp):
+        return jax.lax.scan(step, S, inp)
+
+    state, outs = jax.lax.scan(chunk, state, xs)
+    out = jnp.moveaxis(outs.reshape((s,) + outs.shape[2:]), 0, 1)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    out = logical.constrain(out, "batch", "seq", "q_flat")
+    return nn.dense(out, tm["wo"]), state, x[:, -1]
+
+
+def channel_mix(cm, x: jnp.ndarray, x_last: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xprev = _shift(x).at[:, 0].set(x_last.astype(x.dtype))
+    r = jax.nn.sigmoid(nn.dense(_mix(x, xprev, cm["mu_r"]), cm["wr"]))
+    k = nn.dense(_mix(x, xprev, cm["mu_k"]), cm["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    return r * nn.dense(k, cm["wv"]), x[:, -1]
+
+
+def init_state(a: RWKVArgs, batch: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "S": jnp.zeros((batch, a.n_heads, a.head_dim, a.head_dim),
+                       jnp.float32),
+        "x_tm": jnp.zeros((batch, a.d_model), jnp.float32),
+        "x_cm": jnp.zeros((batch, a.d_model), jnp.float32),
+    }
+
+
+def apply(p, a: RWKVArgs, x: jnp.ndarray, state: Dict
+          ) -> Tuple[jnp.ndarray, Dict]:
+    """One full RWKV block (time-mix + channel-mix), pre-norm residuals."""
+    y, s_new, xtm = time_mix(p["tm"], a, nn.rmsnorm(x, p["ln1"]),
+                             state["S"], state["x_tm"])
+    x = x + y
+    y, xcm = channel_mix(p["cm"], nn.rmsnorm(x, p["ln2"]), state["x_cm"])
+    x = x + y
+    return x, {"S": s_new, "x_tm": xtm, "x_cm": xcm}

@@ -1,0 +1,39 @@
+"""Modality frontend stubs for [vlm] / [audio] architectures.
+
+Per the assignment, llava-next and musicgen are specified as transformer
+BACKBONES only: the vision tower / EnCodec tokenizer are stubs whose output
+-- precomputed patch/frame embeddings in d_model -- arrives as a model input
+(`input_specs` supplies the ShapeDtypeStruct; tests synthesise them).  The
+backbone prepends them to the token embeddings and masks them out of the LM
+loss, which is exactly how the real models consume their frontends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# anyres default tile of llava-next (24x24 patches); musicgen: 50 Hz frames
+FRONTEND_TOKENS = {"vision": 576, "audio": 250}
+
+
+def frontend_tokens(kind: Optional[str], override: int = 0) -> int:
+    if kind is None:
+        return 0
+    return override or FRONTEND_TOKENS[kind]
+
+
+def synth_frontend(key: jax.Array, kind: str, batch: int, n_tokens: int,
+                   d_model: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Deterministic stand-in embeddings for tests/examples."""
+    scale = 0.02 if kind == "vision" else 0.05
+    return (jax.random.normal(key, (batch, n_tokens, d_model), jnp.float32)
+            * scale).astype(dtype)
+
+
+def frontend_spec(kind: Optional[str], batch: int, n_tokens: int,
+                  d_model: int) -> Optional[jax.ShapeDtypeStruct]:
+    if kind is None:
+        return None
+    return jax.ShapeDtypeStruct((batch, n_tokens, d_model), jnp.bfloat16)

@@ -1,0 +1,438 @@
+"""Architecture builder: dense / MoE / hybrid / SSM stacks from one config.
+
+A model is a periodic pattern of blocks (gemma3: 5 local + 1 global
+attention; jamba: 7 mamba + 1 attention with MoE on alternate layers;
+deepseek/qwen: MoE every layer; rwkv: attention-free).  Parameters for each
+pattern position are stacked across periods so the layer stack lowers as a
+single `lax.scan` -- essential to keep HLO size and compile time flat in
+depth for the 88-layer dry-run configs.
+
+Exposes the three lowering entry points of the framework:
+  * `loss_fn` / train     -- full causal LM loss (+ MoE aux),
+  * `prefill`             -- logits for the last position + per-layer caches,
+  * `decode_step`         -- one token against carried caches/states.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mamba, mlp, modules as nn, moe, rwkv
+from repro.sharding import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10_000.0
+    # attention pattern
+    window: Optional[int] = None   # sliding-window width for local layers
+    local_ratio: int = 0           # N local layers per 1 global (gemma3: 5)
+    # MoE
+    moe_every: int = 0             # 0: none, 1: every layer, 2: alternate
+    n_routed: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_expert: int = 0
+    n_padded: int = 0
+    # hybrid (jamba)
+    attn_every: int = 0            # one attention layer per this many
+    d_state: int = 16
+    # ssm
+    rwkv: bool = False
+    # modality frontend (stub: precomputed embeddings)
+    frontend: Optional[str] = None
+    n_frontend_tokens: int = 0
+    subquadratic: bool = False     # may run long_500k
+    norm_eps: float = 1e-6
+
+    # ------------------------------------------------------------ pattern
+
+    @property
+    def period(self) -> int:
+        p = 1
+        if self.local_ratio:
+            p = self.local_ratio + 1
+        if self.attn_every:
+            p = max(p, self.attn_every)
+        if self.moe_every:
+            p = max(p, self.moe_every)
+        assert self.n_layers % p == 0, (self.n_layers, p)
+        return p
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    def layer_kind(self, pos: int) -> Dict[str, Any]:
+        """Block descriptor for pattern position `pos` (0..period-1)."""
+        if self.rwkv:
+            return {"mixer": "rwkv", "ffn": None}
+        if self.attn_every:
+            mixer = "attn" if pos == self.attn_every // 2 else "mamba"
+        elif self.local_ratio:
+            mixer = "attn_local" if pos < self.local_ratio else "attn"
+        else:
+            mixer = "attn_local" if self.window else "attn"
+        if self.moe_every and (pos % self.moe_every == self.moe_every - 1):
+            ffn = "moe"
+        elif self.moe_every == 1:
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        return {"mixer": mixer, "ffn": ffn}
+
+    # ------------------------------------------------------------ helpers
+
+    def attn_args(self, local: bool) -> attention.AttnArgs:
+        import os as _os
+        pq = pkv = 0
+        if _os.environ.get("REPRO_PAD_HEADS") == "1":
+            # SSPerf lever: round head counts up to divide the model axis;
+            # padded heads are hard-masked (model function unchanged)
+            if self.n_heads % 16:
+                pq = -(-self.n_heads // 16) * 16
+            if self.n_kv_heads % 16 and self.n_kv_heads >= 8:
+                pkv = 16
+        return attention.AttnArgs(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+            rope_theta=self.rope_theta,
+            window=self.window if local else None,
+            pad_q_heads=pq, pad_kv_heads=pkv)
+
+    def moe_args(self) -> moe.MoEArgs:
+        return moe.MoEArgs(
+            d_model=self.d_model, n_routed=self.n_routed, top_k=self.top_k,
+            d_expert=self.d_expert, n_shared=self.n_shared,
+            n_padded=self.n_padded)
+
+    def mamba_args(self) -> mamba.MambaArgs:
+        return mamba.MambaArgs(d_model=self.d_model, d_state=self.d_state)
+
+    def rwkv_args(self) -> rwkv.RWKVArgs:
+        return rwkv.RWKVArgs(d_model=self.d_model, d_ff=self.d_ff)
+
+    def param_count(self) -> int:
+        specs = model_specs(self)
+        blocks = sum(nn.param_count(specs["blocks"][pos])
+                     for pos in range(self.period)) * self.n_periods
+        other = nn.param_count({k: v for k, v in specs.items()
+                                if k != "blocks"})
+        return blocks + other
+
+
+# ------------------------------------------------------------------ specs
+
+def _block_specs(cfg: ArchConfig, pos: int):
+    kind = cfg.layer_kind(pos)
+    s: Dict[str, Any] = {}
+    if kind["mixer"] == "rwkv":
+        s["rwkv"] = rwkv.specs(cfg.rwkv_args())
+        return s
+    s["ln1"] = nn.ParamSpec((cfg.d_model,), ("embed",), "ones")
+    if kind["mixer"] == "mamba":
+        s["mamba"] = mamba.specs(cfg.mamba_args())
+    else:
+        s["attn"] = attention.specs(
+            cfg.attn_args(kind["mixer"] == "attn_local"))
+    s["ln2"] = nn.ParamSpec((cfg.d_model,), ("embed",), "ones")
+    if kind["ffn"] == "moe":
+        s["moe"] = moe.specs(cfg.moe_args())
+    else:
+        s["mlp"] = mlp.specs(cfg.d_model, cfg.d_ff)
+    return s
+
+
+def model_specs(cfg: ArchConfig):
+    return {
+        "embed": nn.ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                              "normal", 0.02),
+        "blocks": [_block_specs(cfg, pos) for pos in range(cfg.period)],
+        "ln_f": nn.ParamSpec((cfg.d_model,), ("embed",), "ones"),
+        "head": nn.dense_spec(cfg.d_model, cfg.vocab, ("embed", "vocab"),
+                              scale=0.02),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    """Realise params; per-pattern-position leaves stacked over periods."""
+    specs = model_specs(cfg)
+    k_embed, k_blocks, k_out = jax.random.split(key, 3)
+    params = {
+        "embed": nn.init_tree(specs["embed"], k_embed, dtype),
+        "ln_f": nn.init_tree(specs["ln_f"], k_out, dtype),
+        "head": nn.init_tree(specs["head"],
+                             jax.random.fold_in(k_out, 1), dtype),
+        "blocks": [],
+    }
+    for pos in range(cfg.period):
+        bs = specs["blocks"][pos]
+        stacked = jax.vmap(
+            lambda k: nn.init_tree(bs, k, dtype))(
+            jax.random.split(jax.random.fold_in(k_blocks, pos),
+                             cfg.n_periods))
+        params["blocks"].append(stacked)
+    return params
+
+
+def param_axes(cfg: ArchConfig):
+    """Logical axes matching init_params (stacked leaves get leading None)."""
+    specs = model_specs(cfg)
+    axes = {
+        "embed": specs["embed"].axes,
+        "ln_f": specs["ln_f"].axes,
+        "head": specs["head"].axes,
+        "blocks": [jax.tree.map(lambda s: (None,) + s.axes,
+                                specs["blocks"][pos],
+                                is_leaf=lambda x: isinstance(x, nn.ParamSpec))
+                   for pos in range(cfg.period)],
+    }
+    return axes
+
+
+# ---------------------------------------------------------------- forward
+
+def _apply_block(cfg: ArchConfig, pos: int, p, x: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block (train).  Returns (x, aux)."""
+    kind = cfg.layer_kind(pos)
+    aux = jnp.float32(0.0)
+    if kind["mixer"] == "rwkv":
+        state = rwkv.init_state(cfg.rwkv_args(), x.shape[0])
+        x, _ = rwkv.apply(p["rwkv"], cfg.rwkv_args(), x, state)
+        return x, aux
+    h = nn.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind["mixer"] == "mamba":
+        x = x + mamba.apply(p["mamba"], cfg.mamba_args(), h)
+    else:
+        x = x + attention.apply(
+            p["attn"], cfg.attn_args(kind["mixer"] == "attn_local"), h)
+    h = nn.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind["ffn"] == "moe":
+        y, aux = moe.apply(p["moe"], cfg.moe_args(), h)
+        x = x + y
+    else:
+        x = x + mlp.apply(p["mlp"], h)
+    return x, aux
+
+
+def _embed_inputs(cfg: ArchConfig, params, tokens: jnp.ndarray,
+                  frontend_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return logical.constrain(x, "batch", "seq", "embed")
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B,S] -> (logits [B,S_total,V], moe aux scalar)."""
+    x = _embed_inputs(cfg, params, tokens, frontend_embeds)
+
+    def period_fn(x, pparams):
+        aux = jnp.float32(0.0)
+        for pos in range(cfg.period):
+            x, a = _apply_block(cfg, pos, pparams[pos], x)
+            aux = aux + a
+        return x, aux
+
+    if remat:
+        import os as _os
+        if _os.environ.get("REPRO_REMAT_POLICY") == "dots":
+            # SSPerf lever: keep matmul outputs, recompute elementwise only
+            body = jax.checkpoint(
+                period_fn,
+                policy=jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(period_fn)
+    else:
+        body = period_fn
+    # scan over periods; xs = tuple of per-position trees, leaves [n_periods,..]
+    x, auxs = jax.lax.scan(body, x, tuple(params["blocks"]))
+    x = nn.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = nn.dense(x, params["head"]).astype(jnp.float32)
+    logits = logical.constrain(logits, "batch", "seq", "vocab")
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens [B,S], targets [B,S] (+ frontend_embeds [B,F,d])."""
+    fe = batch.get("frontend_embeds")
+    logits, aux = forward(params, cfg, batch["tokens"], fe)
+    f = 0 if fe is None else fe.shape[1]
+    logits = logits[:, f:, :]
+    xent = nn.softmax_xent(logits, batch["targets"], batch.get("mask"))
+    loss = xent + aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ------------------------------------------------------------- serving
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> List[Any]:
+    """Per-pattern-position caches, leaves stacked over periods."""
+    caches = []
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        if kind["mixer"] == "rwkv":
+            c = rwkv.init_state(cfg.rwkv_args(), batch)
+        elif kind["mixer"] == "mamba":
+            c = mamba.init_cache(cfg.mamba_args(), batch, dtype)
+        else:
+            hkv = cfg.attn_args(False).hkv
+            c = {"k": jnp.zeros((batch, hkv, max_len, cfg.d_head), dtype),
+                 "v": jnp.zeros((batch, hkv, max_len, cfg.d_head), dtype)}
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.n_periods,) + a.shape), c)
+        caches.append(stacked)
+    return caches
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                caches: List[Any], cache_len: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, List[Any]]:
+    """token [B] int32 -> (logits [B,V], updated caches).
+
+    cache_len [B]: current filled length (same for all layers).
+    """
+    x = params["embed"][token][:, None, :]              # [B,1,d]
+
+    def one_block(x, pos, p, c):
+        kind = cfg.layer_kind(pos)
+        if kind["mixer"] == "rwkv":
+            return rwkv.apply(p["rwkv"], cfg.rwkv_args(), x, c)
+        h = nn.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if kind["mixer"] == "mamba":
+            y, c = mamba.decode_step(p["mamba"], cfg.mamba_args(), h, c)
+            x = x + y
+        else:
+            y, c = attention.decode_step(
+                p["attn"], cfg.attn_args(kind["mixer"] == "attn_local"),
+                h, c, cache_len)
+            x = x + y
+        h = nn.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = _ffn(cfg, kind, p, x, h)
+        return x, c
+
+    def period_fn(x, inp):
+        pparams, pcaches = inp
+        newc = []
+        for pos in range(cfg.period):
+            x, c = one_block(x, pos, pparams[pos], pcaches[pos])
+            newc.append(c)
+        return x, tuple(newc)
+
+    x, new_caches = jax.lax.scan(
+        period_fn, x, (tuple(params["blocks"]), tuple(caches)))
+    x = nn.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = nn.dense(x[:, 0], params["head"]).astype(jnp.float32)
+    return logits, list(new_caches)
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            max_len: int,
+            frontend_embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, List[Any], jnp.ndarray]:
+    """Prefill the caches with a full prompt; returns (last-token logits,
+    caches padded to max_len, cache_len [B])."""
+    x = _embed_inputs(cfg, params, tokens, frontend_embeds)
+    b, s, _ = x.shape
+
+    def one_block(x, pos, p):
+        kind = cfg.layer_kind(pos)
+        if kind["mixer"] == "rwkv":
+            st = rwkv.init_state(cfg.rwkv_args(), b)
+            return rwkv.apply(p["rwkv"], cfg.rwkv_args(), x, st)
+        h = nn.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if kind["mixer"] == "mamba":
+            y = mamba.apply(p["mamba"], cfg.mamba_args(), h)
+            x = x + y
+            c = _mamba_tail_state(p["mamba"], cfg.mamba_args(), h)
+        else:
+            aargs = cfg.attn_args(kind["mixer"] == "attn_local")
+            y, kv = attention.apply_and_cache(p["attn"], aargs, h)
+            x = x + y
+            c = {k: _pad_cache(v, max_len) for k, v in kv.items()}
+        hh = nn.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = _ffn(cfg, kind, p, x, hh)
+        return x, c
+
+    def period_fn(x, pparams):
+        newc = []
+        for pos in range(cfg.period):
+            x, c = one_block(x, pos, pparams[pos])
+            newc.append(c)
+        return x, tuple(newc)
+
+    x, new_caches = jax.lax.scan(period_fn, x, tuple(params["blocks"]))
+    x = nn.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = nn.dense(x[:, -1], params["head"]).astype(jnp.float32)
+    cache_len = jnp.full((b,), s, jnp.int32)
+    return logits, list(new_caches), cache_len
+
+
+def _ffn(cfg, kind, p, x, h):
+    if kind["ffn"] == "moe":
+        y, _ = moe.apply(p["moe"], cfg.moe_args(), h)
+        return x + y
+    if kind["ffn"] is None:
+        return x
+    return x + mlp.apply(p["mlp"], h)
+
+
+def _pad_cache(kv: jnp.ndarray, max_len: int) -> jnp.ndarray:
+    b, h, s, d = kv.shape
+    if s >= max_len:
+        return kv[:, :, :max_len]
+    return jnp.pad(kv, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
+
+
+def _mamba_tail_state(p, a: mamba.MambaArgs, h: jnp.ndarray):
+    """Decode cache after a prefill: conv tail + SSM state of the last chunk.
+
+    Approximation-free for the conv window; the SSM state is recomputed by
+    scanning the full sequence once more at chunk granularity (cheap: the
+    scan is the same cost as the forward pass's state propagation).
+    """
+    xz = nn.dense(h, p["in_proj"])
+    u, _ = jnp.split(xz, 2, axis=-1)
+    conv_tail = u[:, -(a.d_conv - 1):, :]
+    uc = jax.nn.silu(mamba._causal_conv(u, p["conv_w"], p["conv_b"]))
+    bsz, s, _ = uc.shape
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))
+    ch = min(a.chunk, s)
+    ucc = jnp.moveaxis(uc.reshape(bsz, s // ch, ch, -1), 1, 0)
+
+    def body(hst, u_ch):
+        dt, bc, _ = mamba._ssm_params(p, a, u_ch)
+        dtf = dt.astype(jnp.float32)
+        ea = jnp.exp(dtf[..., None] * a_mat[None, None])
+        bu = (dtf * u_ch.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[..., None, :]
+
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        ea_s, bu_s = jax.lax.associative_scan(comb, (ea, bu), axis=1)
+        return ea_s[:, -1] * hst + bu_s[:, -1], None
+
+    h0 = jnp.zeros((bsz, a.d_inner, a.d_state), jnp.float32)
+    hend, _ = jax.lax.scan(body, h0, ucc)
+    return {"conv": conv_tail, "h": hend}

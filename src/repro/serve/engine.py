@@ -1,0 +1,136 @@
+"""Batched serving engine: slot-based continuous batching over fixed caches.
+
+A fixed pool of `n_slots` cache rows (KV for attention layers, SSM/conv
+state for mamba/rwkv) is shared by all in-flight requests:
+
+  submit()  -> pick a free slot, prefill the prompt into it
+  step()    -> one batched decode for every active slot (single jitted call)
+  finished  -> slot freed (eos or per-request max_new), results returned
+
+Decode shapes stay static (whole pool decodes each step; inactive slots are
+masked) -- the standard TPU-friendly serving discipline: no recompile as
+requests come and go.  The dry-run's `serve_step` is exactly `self._decode`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.transformer import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, n_slots: int, max_len: int,
+                 eos_id: int = 1, temperature: float = 0.0, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.eos = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = T.init_caches(cfg, n_slots, max_len,
+                                    jax.tree.leaves(params)[0].dtype)
+        self.cache_len = jnp.zeros((n_slots,), jnp.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.next_rid = 0
+
+        self._decode = jax.jit(
+            lambda p, tok, caches, clen: T.decode_step(
+                p, cfg, tok, caches, clen))
+        self.pending_tok = np.zeros(n_slots, np.int32)
+
+    # ------------------------------------------------------------ admit
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> Optional[int]:
+        free = np.where(~self.active)[0]
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        req = Request(self.next_rid, np.asarray(prompt, np.int32), max_new,
+                      slot=slot)
+        self.next_rid += 1
+        self._prefill_into(req)
+        self.slot_req[slot] = req
+        self.active[slot] = True
+        return req.rid
+
+    def _prefill_into(self, req: Request) -> None:
+        """Prefill one prompt and write its cache rows into the pool slot."""
+        toks = jnp.asarray(req.prompt)[None, :]
+        logits, caches_1, clen_1 = T.prefill(self.params, self.cfg, toks,
+                                             self.max_len)
+        slot = req.slot
+        # splice the single-row caches into the pool at `slot`
+        def splice(pool, one):
+            return pool.at[:, slot].set(one[:, 0])
+        self.caches = [jax.tree.map(splice, cp, c1)
+                       for cp, c1 in zip(self.caches, caches_1)]
+        self.cache_len = self.cache_len.at[slot].set(clen_1[0])
+        self.pending_tok[slot] = int(jnp.argmax(logits[0]))
+        req.out.append(int(self.pending_tok[slot]))
+
+    # ------------------------------------------------------------ decode
+
+    def step(self) -> List[Request]:
+        """One batched decode across the pool; returns newly finished."""
+        if not self.active.any():
+            return []
+        tok = jnp.asarray(self.pending_tok)
+        logits, self.caches = self._decode(self.params, tok, self.caches,
+                                           self.cache_len)
+        self.cache_len = jnp.where(jnp.asarray(self.active),
+                                   self.cache_len + 1, self.cache_len)
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            nxt = jax.random.categorical(k, logits / self.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        nxt = np.asarray(nxt, np.int32)
+        finished = []
+        for slot in np.where(self.active)[0]:
+            req = self.slot_req[slot]
+            req.out.append(int(nxt[slot]))
+            self.pending_tok[slot] = nxt[slot]
+            hit_eos = nxt[slot] == self.eos
+            full = int(self.cache_len[slot]) + 1 >= self.max_len
+            if hit_eos or len(req.out) >= req.max_new or full:
+                req.done = True
+                finished.append(req)
+                self.active[slot] = False
+                self.slot_req[slot] = None
+                self.cache_len = self.cache_len.at[slot].set(0)
+        return finished
+
+    def generate(self, prompts: List[np.ndarray], max_new: int = 32
+                 ) -> Dict[int, List[int]]:
+        """Convenience batch API with rolling admission."""
+        queue = list(prompts)
+        results: Dict[int, List[int]] = {}
+        rid_of: Dict[int, int] = {}
+        submitted = 0
+        while queue or self.active.any():
+            while queue:
+                rid = self.submit(queue[0], max_new)
+                if rid is None:
+                    break
+                rid_of[rid] = submitted
+                submitted += 1
+                queue.pop(0)
+            for req in self.step():
+                results[rid_of[req.rid]] = req.out
+        return results

@@ -1,0 +1,166 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Models annotate every parameter and activation with *logical* axis names
+("embed", "q_flat", "experts", "batch", ...).  A `Rules` table maps logical
+names to mesh axes; `spec_for` resolves a logical signature to a concrete
+`PartitionSpec`, silently dropping any assignment whose mesh-axis product
+does not divide the dimension (the legality constraint -- the TPU analogue
+of the paper's cascade constraint Eq. 5, see DESIGN.md SS2).
+
+The rules table is exactly the *sharding genotype* that `core.autoshard`
+evolves: a placement of tensor dimensions onto mesh axes, scored by the
+roofline cost model.
+
+Usage:
+    with activate(mesh, rules):
+        lowered = jax.jit(train_step, in_shardings=...).lower(...)
+Inside model code: `x = constrain(x, "batch", "seq", None)` etc.
+Without an active context every call is the identity, so the same model
+runs unmodified on a single CPU device (smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+
+    table: Tuple[Tuple[str, MeshAxes], ...]
+
+    def get(self, name: str) -> MeshAxes:
+        for k, v in self.table:
+            if k == name:
+                return v
+        return None
+
+    def override(self, **kv: MeshAxes) -> "Rules":
+        items = [(k, v) for k, v in self.table if k not in kv]
+        items += list(kv.items())
+        return Rules(tuple(items))
+
+    def as_dict(self) -> Dict[str, MeshAxes]:
+        return dict(self.table)
+
+
+def default_rules(multi_pod: bool = False) -> Rules:
+    """The baseline layout: batch over (pod,)data; width over model."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return Rules((
+        ("batch", batch),
+        ("seq", None),                 # sequence replicated by default
+        ("kv_seq", "model"),           # KV caches: flash-decoding split-KV
+        ("embed", None),
+        ("q_flat", "model"),           # flattened H*dh -- divides everywhere
+        ("kv_flat", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("head", None),
+        ("mlp", "model"),
+        ("experts", "model"),
+        ("expert_mlp", None),
+        ("vocab", "model"),
+        ("ssm_inner", "model"),
+        ("ssm_state", None),
+        ("frontend", None),
+    ))
+
+
+# --------------------------------------------------------------- context
+
+_ACTIVE: List[Tuple[Mesh, Rules]] = []
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Rules):
+    _ACTIVE.append((mesh, rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current() -> Optional[Tuple[Mesh, Rules]]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    c = current()
+    return c[0] if c else None
+
+
+# ------------------------------------------------------------- resolution
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Rules] = None) -> P:
+    """Resolve logical axes -> PartitionSpec with divisibility fallback."""
+    ctx = current()
+    if mesh is None or rules is None:
+        if ctx is None:
+            return P(*([None] * len(shape)))
+        mesh = mesh or ctx[0]
+        rules = rules or ctx[1]
+    parts: List[MeshAxes] = []
+    used: set = set()
+    for name, dim in zip(axes, shape):
+        assign = rules.get(name) if name else None
+        if assign is not None:
+            tup = (assign,) if isinstance(assign, str) else tuple(assign)
+            tup = tuple(a for a in tup if a in mesh.shape and a not in used)
+            size = _axes_size(mesh, tup)
+            if size > 1 and dim % size == 0:
+                parts.append(tup if len(tup) > 1 else tup[0])
+                used.update(tup)
+                continue
+        parts.append(None)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical axes; identity w/o context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(axes: Sequence[Optional[str]], shape: Sequence[int],
+                   mesh: Optional[Mesh] = None,
+                   rules: Optional[Rules] = None) -> NamedSharding:
+    ctx = current()
+    mesh = mesh or (ctx[0] if ctx else None)
+    rules = rules or (ctx[1] if ctx else None)
+    assert mesh is not None, "no active mesh"
+    return NamedSharding(mesh, spec_for(axes, shape, mesh, rules))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Optional[Mesh] = None,
+                   rules: Optional[Rules] = None):
+    """Map a tree of logical-axis tuples + shapes -> NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shp: named_sharding(axes, shp, mesh, rules),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,65 @@
+"""Jitted train step: loss + grads + AdamW, with microbatch accumulation.
+
+`make_train_step` builds the canonical step the dry-run lowers:
+params/opt-state shardings come from the logical rules, the batch is
+data-sharded, donation keeps params/opt-state in place.  Microbatching
+(grad accumulation via lax.scan over batch slices) trades activation memory
+for steps -- one of the hillclimb levers in EXPERIMENTS.md SSPerf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.transformer import ArchConfig
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt.OptConfig,
+                    n_micro: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                loss, metrics, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (loss, metrics)
+
+            mb = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:]), batch)
+            # zeros_like keeps the param's sharding -> the f32 accumulator
+            # stays FSDP/TP-sharded instead of replicating (critical at 123B)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+            gsum, (losses, metricss) = jax.lax.scan(micro, zero, mb)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricss)
+        new_params, new_opt, onorm = opt.update(ocfg, params, grads,
+                                                opt_state)
+        metrics = dict(metrics, loss=loss, **onorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = T.loss_fn(params, cfg, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,125 @@
+"""Training loop with checkpoint/restart, elastic recovery, straggler watch.
+
+Single-controller driver used by examples/train_lm.py and launch/train.py.
+The loop is deliberately explicit about its fault-tolerance contract:
+
+  on start     : restore latest checkpoint if present (params, opt, step)
+  every K steps: async atomic checkpoint (params+opt+data state)
+  on failure   : (simulated via `inject_failure_at` or a raised exception)
+                 -> remesh_plan -> restore onto the new mesh ->
+                 Pipeline.resume with the new shard split -> continue
+  every step   : StragglerMonitor.record; mitigation logged when flagged
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import transformer as T
+from repro.models.transformer import ArchConfig
+from repro.runtime.elastic import StragglerMonitor
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    n_micro: int = 1
+    param_dtype: Any = None        # default fp32
+    inject_failure_at: Optional[int] = None   # test hook
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, ocfg: opt.OptConfig,
+                 tcfg: TrainerConfig, data_cfg: DataConfig,
+                 seed: int = 0):
+        self.cfg, self.ocfg, self.tcfg = cfg, ocfg, tcfg
+        self.data_cfg = data_cfg
+        self.pipeline = Pipeline(data_cfg)
+        key = jax.random.PRNGKey(seed)
+        dtype = tcfg.param_dtype or jax.numpy.float32
+        self.params = T.init_params(cfg, key, dtype)
+        self.opt_state = opt.init(self.params, ocfg.compress_grads)
+        self.step = 0
+        self.train_step = jax.jit(
+            make_train_step(cfg, ocfg, tcfg.n_micro),
+            donate_argnums=(0, 1))
+        self.monitor = StragglerMonitor()
+        self.history: List[Dict[str, float]] = []
+        if tcfg.ckpt_dir and checkpoint.latest_steps(tcfg.ckpt_dir):
+            self._restore()
+
+    # ------------------------------------------------------------ ckpt
+
+    def _save(self, async_: bool = True):
+        if not self.tcfg.ckpt_dir:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        checkpoint.save(self.tcfg.ckpt_dir, self.step, tree,
+                        meta={"data": self.pipeline.state(self.step),
+                              "arch": self.cfg.name},
+                        async_=async_)
+
+    def _restore(self):
+        like = {"params": self.params, "opt": self.opt_state}
+        tree = checkpoint.restore(self.tcfg.ckpt_dir, like)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = checkpoint.manifest(self.tcfg.ckpt_dir)["step"]
+        self.pipeline = Pipeline.resume(
+            self.data_cfg, checkpoint.manifest(
+                self.tcfg.ckpt_dir)["meta"]["data"])
+
+    # ------------------------------------------------------------ loop
+
+    def run(self) -> List[Dict[str, float]]:
+        while self.step < self.tcfg.steps:
+            if (self.tcfg.inject_failure_at is not None
+                    and self.step == self.tcfg.inject_failure_at):
+                self.tcfg.inject_failure_at = None
+                raise SimulatedFailure(f"injected at step {self.step}")
+            t0 = time.monotonic()
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.pipeline.batch(self.step).items()}
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            dt = time.monotonic() - t0
+            self.monitor.record(dt)
+            if self.step % self.tcfg.log_every == 0 or \
+                    self.step == self.tcfg.steps:
+                row = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                row.update(step=self.step, sec_per_step=dt,
+                           straggler=float(self.monitor.straggling()))
+                self.history.append(row)
+            if self.tcfg.ckpt_every and \
+                    self.step % self.tcfg.ckpt_every == 0:
+                self._save()
+        self._save(async_=False)
+        return self.history
+
+    def run_with_recovery(self) -> List[Dict[str, float]]:
+        """Run; on failure, restore from the last checkpoint and continue --
+        the single-process analogue of a full job restart after remesh."""
+        try:
+            return self.run()
+        except SimulatedFailure:
+            if self.tcfg.ckpt_dir and checkpoint.latest_steps(
+                    self.tcfg.ckpt_dir):
+                self._restore()
+            else:                    # no checkpoint yet: restart from 0
+                self.step = 0
+            return self.run()

@@ -1,0 +1,25 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / host device count here -- smoke tests and
+# benches must see the real single CPU device; only launch/dryrun.py forces
+# the 512-device placeholder topology (and only in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+from repro.fpga import device, netlist  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def small_problem():
+    return netlist.make_problem(device.get_device("xcvu_test"))
+
+
+@pytest.fixture(scope="session")
+def vu11p_problem():
+    return netlist.make_problem(device.get_device("xcvu11p"))

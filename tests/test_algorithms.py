@@ -1,0 +1,157 @@
+"""Algorithm correctness: NSGA-II machinery vs oracles + optimization sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import annealing, cmaes, evolve, ga, nsga2, objectives as O
+from repro.core import genotype as G
+from repro.fpga import device, netlist
+
+PROB = netlist.make_problem(device.get_device("xcvu_test"))
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------- NSGA-II machinery
+
+def _rank_oracle(objs: np.ndarray) -> np.ndarray:
+    """O(P^2 M) peel-off non-dominated sorting oracle."""
+    p = objs.shape[0]
+    rank = np.full(p, -1)
+    alive = np.ones(p, bool)
+    r = 0
+    while alive.any():
+        front = []
+        for i in np.where(alive)[0]:
+            dominated = False
+            for j in np.where(alive)[0]:
+                if i == j:
+                    continue
+                if np.all(objs[j] <= objs[i]) and np.any(objs[j] < objs[i]):
+                    dominated = True
+                    break
+            if not dominated:
+                front.append(i)
+        for i in front:
+            rank[i] = r
+            alive[i] = False
+        r += 1
+    return rank
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.integers(4, 40))
+def test_nondominated_rank_matches_oracle(seed, p):
+    objs = jax.random.uniform(jax.random.PRNGKey(seed), (p, 2))
+    got = np.asarray(nsga2.nondominated_rank(objs))
+    want = _rank_oracle(np.asarray(objs))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 64))
+def test_ox_crossover_emits_permutations(seed, n):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p1 = jax.random.permutation(k1, n).astype(jnp.int32)
+    p2 = jax.random.permutation(k2, n).astype(jnp.int32)
+    child = nsga2._ox(k3, p1, p2)
+    np.testing.assert_array_equal(np.sort(np.asarray(child)), np.arange(n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_swap_mutation_emits_permutations(seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p = jax.random.permutation(k1, 33).astype(jnp.int32)
+    out = nsga2._swap_mut(k2, p, 3, 0.7)
+    np.testing.assert_array_equal(np.sort(np.asarray(out)), np.arange(33))
+
+
+def test_ox_preserves_segment():
+    # with deterministic parents, child must contain p1's values
+    p1 = jnp.arange(10, dtype=jnp.int32)
+    p2 = jnp.asarray(list(reversed(range(10))), jnp.int32)
+    child = nsga2._ox(jax.random.PRNGKey(5), p1, p2)
+    np.testing.assert_array_equal(np.sort(np.asarray(child)), np.arange(10))
+
+
+def test_crowding_boundaries_are_infinite():
+    objs = jnp.asarray([[0., 3.], [1., 2.], [2., 1.], [3., 0.]])
+    rank = nsga2.nondominated_rank(objs)
+    crowd = nsga2.crowding_distance(objs, rank)
+    c = np.asarray(crowd)
+    assert c[0] >= 1e9 and c[3] >= 1e9   # extremes of the single front
+    assert c[1] < 1e9 and c[2] < 1e9
+
+
+# ----------------------------------------------------- optimization runs
+
+def _improves(hist) -> bool:
+    c = np.asarray(O.combined_metric(hist))
+    return c[-1] < c[0]
+
+
+def test_nsga2_improves():
+    _, hist = evolve.run(PROB, "nsga2", nsga2.NSGA2Config(pop_size=16),
+                         KEY, 25)
+    assert _improves(hist)
+
+
+def test_nsga2_reduced_improves():
+    cfg = nsga2.NSGA2Config(pop_size=16, reduced=True)
+    _, hist = evolve.run(PROB, "nsga2", cfg, KEY, 25)
+    assert _improves(hist)
+
+
+def test_cmaes_improves():
+    _, hist = evolve.run(PROB, "cmaes", cmaes.CMAESConfig(pop_size=12),
+                         KEY, 40)
+    assert _improves(hist)
+
+
+def test_sa_improves():
+    cfg = annealing.SAConfig(schedule="hyperbolic")
+    st0 = annealing.init_state(PROB, KEY, cfg)
+    out = annealing.run_chain(PROB, cfg, KEY, 400, st0)
+    first = O.combined_metric(out["history"][0])
+    last = O.combined_metric(out["state"]["best_objs"])
+    assert float(last) < float(first)
+
+
+def test_ga_improves():
+    _, hist = evolve.run(PROB, "ga", ga.GAConfig(pop_size=16), KEY, 25)
+    assert _improves(hist)
+
+
+@pytest.mark.parametrize("schedule", annealing.SCHEDULES)
+def test_sa_schedules_run(schedule):
+    cfg = annealing.SAConfig(schedule=schedule)
+    st0 = annealing.init_state(PROB, KEY, cfg)
+    out = annealing.run_chain(PROB, cfg, KEY, 50, st0)
+    assert np.isfinite(np.asarray(out["state"]["best_objs"])).all()
+
+
+def test_nsga2_children_always_legal():
+    cfg = nsga2.NSGA2Config(pop_size=8)
+    state = nsga2.init_state(PROB, KEY, cfg)
+    for i in range(3):
+        state = nsga2.step(PROB, cfg, state, jax.random.fold_in(KEY, i))
+    for j in range(8):
+        O.assert_valid(PROB, jax.tree.map(lambda a: a[j], state["pop"]))
+
+
+def test_islands_migration_improves():
+    st, hist = evolve.run_islands(
+        PROB, "nsga2", nsga2.NSGA2Config(pop_size=8), KEY,
+        rounds=3, gens_per_round=4)
+    c = np.asarray(O.combined_metric(hist))
+    assert c[-1].min() <= c[0].min()
+
+
+def test_cmaes_best_genotype_valid():
+    cfg = cmaes.CMAESConfig(pop_size=8)
+    state, _ = evolve.run(PROB, "cmaes", cfg, KEY, 10)
+    g, objs = cmaes.best_genotype(PROB, state)
+    O.assert_valid(PROB, g)
+    assert np.isfinite(np.asarray(objs)).all()

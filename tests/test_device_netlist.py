@@ -1,0 +1,63 @@
+"""Device-model and netlist invariants, pinned to the paper's numbers."""
+import numpy as np
+import pytest
+
+from repro.fpga import device, netlist
+from repro.fpga.device import BRAM, DSP, URAM
+
+
+def test_vu11p_matches_paper_utilization():
+    dev = device.get_device("xcvu11p")
+    util = dev.utilization()
+    # paper SS III-C: 100% URAM, 93.7% DSP, 95.2% BRAM in the repeating rect
+    assert util["URAM"] == pytest.approx(1.0)
+    assert util["DSP"] == pytest.approx(0.9375, abs=1e-3)
+    assert util["BRAM"] == pytest.approx(0.952, abs=1e-3)
+
+
+def test_vu11p_full_chip_resources():
+    dev = device.get_device("xcvu11p")
+    # 6 rects x (5 cols x 32) URAM = 960; x (32 x 48) DSP = 9216;
+    # x (14 x 48) RAMB18 = 4032  -- the paper's VU11P headline numbers
+    tot = {t: int(np.sum(dev.columns[t].cap_sites)) * dev.n_rects
+           for t in (URAM, DSP, BRAM)}
+    assert tot[URAM] == 960
+    assert tot[DSP] == 9216
+    assert tot[BRAM] == 4032
+
+
+@pytest.mark.parametrize("name,units", [
+    ("xcvu3p", 123), ("xcvu5p", 246), ("xcvu7p", 246),
+    ("xcvu9p", 369), ("xcvu11p", 480), ("xcvu13p", 640),
+])
+def test_design_sizes_match_table2(name, units):
+    assert device.get_device(name).units_total == units
+
+
+@pytest.mark.parametrize("name", device.list_devices())
+def test_chain_capacity_sufficient(name):
+    dev = device.get_device(name)
+    for t in (URAM, DSP, BRAM):
+        assert dev.chain_capacity(t) >= dev.chains_needed(t)
+
+
+def test_netlist_structure(small_problem):
+    p = small_problem
+    # 28 blocks per unit; nets reference valid gids; weights positive
+    assert p.n_blocks == p.n_units * netlist.BLOCKS_PER_UNIT
+    assert p.net_src.max() < p.n_blocks and p.net_dst.max() < p.n_blocks
+    assert (p.net_w > 0).all() and (p.net_bits > 0).all()
+    # intra-unit nets stay within their unit except the systolic chain
+    src_u = p.blk_unit[p.net_src]
+    dst_u = p.blk_unit[p.net_dst]
+    cross = np.sum(src_u != dst_u)
+    assert cross == p.n_units - 1  # exactly the inter-unit URAM links
+
+
+def test_register_model_in_paper_range():
+    """Depth-1 pipelining of every net on VU11P should land in the paper's
+    256K-323K register band (Table I)."""
+    prob = netlist.make_problem(device.get_device("xcvu11p"))
+    from repro.core import pipelining
+    regs = pipelining.registers_at_depth(prob, 1)
+    assert 230_000 <= regs <= 340_000, regs

@@ -1,0 +1,91 @@
+"""Genotype decode legality + encodings, incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga import device, netlist
+
+PROB = netlist.make_problem(device.get_device("xcvu_test"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_genotype_always_decodes_legal(seed):
+    """Every genotype decodes to a legal placement -- the paper's central
+    genotype-design claim (cascade constraints encoded, no legalization)."""
+    g = G.random_genotype(jax.random.PRNGKey(seed), PROB)
+    O.assert_valid(PROB, g)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_flat_encoding_always_decodes_legal(seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed),
+                          (PROB.continuous_dim,)) * 2.0
+    O.assert_valid(PROB, G.from_flat(PROB, z))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), total=st.integers(1, 40))
+def test_allocation_exact_and_capped(seed, total):
+    key = jax.random.PRNGKey(seed)
+    caps = jnp.asarray([3, 7, 1, 9, 5, 8, 4, 3], jnp.int32)
+    genes = jax.random.normal(key, (8,)) * 3.0
+    counts = G.allocate_counts(genes, caps, total)
+    assert int(counts.sum()) == total
+    assert bool((counts <= caps).all()) and bool((counts >= 0).all())
+
+
+def test_allocation_follows_genes():
+    caps = jnp.full((4,), 100, jnp.int32)
+    genes = jnp.asarray([5.0, 0.0, 0.0, 0.0])
+    counts = G.allocate_counts(genes, caps, 40)
+    assert int(counts[0]) > 30  # dominant gene takes the bulk
+
+
+def test_flat_roundtrip_perm_exact():
+    g = G.random_genotype(jax.random.PRNGKey(3), PROB)
+    g2 = G.from_flat(PROB, G.to_flat(PROB, g))
+    for t in range(3):
+        np.testing.assert_array_equal(np.asarray(g2["perm"][t]),
+                                      np.asarray(g["perm"][t]))
+        np.testing.assert_allclose(np.asarray(g2["loc"][t]),
+                                   np.asarray(g["loc"][t]), atol=1e-5)
+
+
+def test_reduced_decode_matches_packed_layout():
+    g = G.random_genotype(jax.random.PRNGKey(1), PROB)
+    bx, by = G.decode_reduced(PROB, g["perm"])
+    assert bx.shape == (PROB.n_blocks,)
+    assert not bool(jnp.isnan(bx).any() | jnp.isnan(by).any())
+
+
+def test_mapping_changes_objectives_not_legality():
+    """Permuting the mapping must change wirelength (different unit
+    groupings) but never legality -- the mapping tier only relabels."""
+    key = jax.random.PRNGKey(0)
+    g = G.random_genotype(key, PROB)
+    o1 = O.evaluate(PROB, g)
+    g2 = dict(g)
+    g2["perm"] = tuple(jnp.roll(p, 1) for p in g["perm"])
+    o2 = O.evaluate(PROB, g2)
+    O.assert_valid(PROB, g2)
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))
+
+
+def test_distribution_tier_controls_columns():
+    """Cranking one distribution gene concentrates chains in that column."""
+    g = G.random_genotype(jax.random.PRNGKey(0), PROB)
+    dist = list(g["dist"])
+    dist[1] = jnp.zeros_like(dist[1]).at[0].set(10.0)  # DSP column 0
+    g2 = {**g, "dist": tuple(dist)}
+    bx, _ = G.decode(PROB, g2)
+    dsp_x = PROB.geom[1].col_x[0]
+    dsp_mask = PROB.blk_type == 1
+    frac = np.mean(np.abs(np.asarray(bx)[dsp_mask] - dsp_x) < 1e-4)
+    O.assert_valid(PROB, g2)
+    assert frac > 0.3  # capacity-capped, but clearly concentrated

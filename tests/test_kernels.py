@@ -1,0 +1,138 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bbox, domination, flash_attention, ref, wirelength
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32) * 50.0
+    return x.astype(dtype)
+
+
+# ------------------------------------------------------------ wirelength
+
+@pytest.mark.parametrize("p,n", [(1, 7), (3, 512), (8, 1999), (13, 4097)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wirelength_matches_ref(p, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(p * 1000 + n), 5)
+    args = [_rand(k, (p, n), dtype) for k in ks[:4]]
+    w = jnp.abs(_rand(ks[4], (p, n), dtype)) * 0.1
+    got = wirelength.wirelength2_pallas(*args, w, interpret=True)
+    want = ref.wirelength2_ref(*args, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+# ------------------------------------------------------------------ bbox
+
+@pytest.mark.parametrize("p,u,b", [(1, 6, 28), (4, 80, 28), (2, 130, 5),
+                                   (3, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_maxbbox_matches_ref(p, u, b, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(p + u + b))
+    ux = _rand(k1, (p, u, b), dtype)
+    uy = _rand(k2, (p, u, b), dtype)
+    got = bbox.maxbbox_pallas(ux, uy, interpret=True)
+    want = ref.maxbbox_ref(ux, uy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ------------------------------------------------------------ domination
+
+@pytest.mark.parametrize("p", [3, 64, 127, 200])
+def test_domination_matches_ref(p):
+    objs = jax.random.uniform(jax.random.PRNGKey(p), (p, 2))
+    # inject duplicates + exact ties to hit the strict/non-strict edges
+    objs = objs.at[1].set(objs[0])
+    got = domination.domination_pallas(objs, interpret=True).astype(bool)
+    want = ref.domination_ref(objs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_domination_irreflexive_antisymmetric():
+    objs = jax.random.uniform(jax.random.PRNGKey(0), (50, 2))
+    d = np.asarray(domination.domination_pallas(objs, interpret=True))
+    assert not d.diagonal().any()
+    assert not (d & d.T).any()
+
+
+# -------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [
+    (1, 2, 2, 128, 64),     # MHA, exact blocks
+    (2, 4, 2, 200, 64),     # GQA, ragged seq
+    (1, 8, 1, 384, 128),    # MQA
+    (1, 2, 2, 96, 64),      # sub-block seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, h, hkv, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(h * s), 3)
+    q = _rand(ks[0], (b, h, s, d), dtype) * 0.02
+    k = _rand(ks[1], (b, hkv, s, d), dtype) * 0.02
+    v = _rand(ks[2], (b, hkv, s, d), dtype) * 0.02
+    got = flash_attention.flash_attention_pallas(q, k, v, causal=True,
+                                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = _rand(ks[0], (1, 2, 256, 64), jnp.float32) * 0.02
+    k = _rand(ks[1], (1, 2, 256, 64), jnp.float32) * 0.02
+    v = _rand(ks[2], (1, 2, 256, 64), jnp.float32) * 0.02
+    got = flash_attention.flash_attention_pallas(
+        q, k, v, causal=True, window=window, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_flash_attention_decode_chunk():
+    """S < T: queries are the last S positions (chunked decode/prefill)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (2, 4, 64, 64), jnp.float32) * 0.02
+    k = _rand(ks[1], (2, 2, 320, 64), jnp.float32) * 0.02
+    v = _rand(ks[2], (2, 2, 320, 64), jnp.float32) * 0.02
+    got = flash_attention.flash_attention_pallas(q, k, v, causal=True,
+                                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_ops_flash_attention_grad_runs():
+    """custom_vjp backward (ref recompute) produces finite grads."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (1, 2, 32, 16), jnp.float32) * 0.05
+    k = _rand(ks[1], (1, 2, 32, 16), jnp.float32) * 0.05
+    v = _rand(ks[2], (1, 2, 32, 16), jnp.float32) * 0.05
+
+    def loss(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, True, None, None) ** 2)
+
+    g = jax.grad(loss)(q, k, v)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_decode_attention_ref_masks_correctly():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(ks[0], (2, 4, 32), jnp.float32) * 0.05
+    kc = _rand(ks[1], (2, 2, 64, 32), jnp.float32) * 0.05
+    vc = _rand(ks[2], (2, 2, 64, 32), jnp.float32) * 0.05
+    out_full = ref.decode_attention_ref(q, kc, vc, jnp.asarray([64, 64]))
+    # truncated cache must equal full compute on the truncated arrays
+    out_trunc = ref.decode_attention_ref(q, kc, vc, jnp.asarray([40, 64]))
+    want40 = ref.decode_attention_ref(
+        q[:1], kc[:1, :, :40], vc[:1, :, :40], jnp.asarray([40]))
+    np.testing.assert_allclose(np.asarray(out_trunc[0]),
+                               np.asarray(want40[0]), rtol=1e-5, atol=1e-6)
+    assert not np.allclose(np.asarray(out_full[0]), np.asarray(out_trunc[0]))

@@ -1,0 +1,202 @@
+"""Sharding rules, cost model, autoshard, HLO parser, elastic runtime."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import autoshard
+from repro.runtime import elastic
+from repro.sharding import costmodel as cm
+from repro.sharding import hloparse, logical
+
+
+# ------------------------------------------------------------ logical
+
+def _mesh22():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rules = logical.Rules((("heads", "model"),))
+    # size-1 axis: sharding is a no-op, the resolver replicates instead
+    spec = logical.spec_for(("heads",), (56,), mesh, rules)
+    assert spec == jax.sharding.PartitionSpec(None)
+
+
+def test_spec_drops_nondivisible():
+    import numpy as np  # noqa
+    # fake a 16-wide axis via abstract check: use helper directly
+    class FakeMesh:
+        shape = {"model": 16}
+    rules = logical.Rules((("heads", "model"),))
+    spec = logical.spec_for(("heads",), (56,), FakeMesh, rules)
+    assert spec == jax.sharding.PartitionSpec(None)
+    spec = logical.spec_for(("heads",), (64,), FakeMesh, rules)
+    assert spec == jax.sharding.PartitionSpec("model")
+
+
+def test_spec_no_axis_reuse():
+    class FakeMesh:
+        shape = {"model": 4}
+    rules = logical.Rules((("a", "model"), ("b", "model")))
+    spec = logical.spec_for(("a", "b"), (8, 8), FakeMesh, rules)
+    # the second dim must not reuse the spent axis
+    assert spec == jax.sharding.PartitionSpec("model", None)
+
+
+def test_constrain_is_identity_without_context():
+    x = jnp.ones((4, 4))
+    y = logical.constrain(x, "batch", "embed")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_rules_override():
+    r = logical.default_rules()
+    r2 = r.override(kv_seq=("data", "model"))
+    assert r2.get("kv_seq") == ("data", "model")
+    assert r.get("kv_seq") == "model"
+
+
+# ----------------------------------------------------------- costmodel
+
+MESH = cm.MeshShape(1, 16, 16)
+
+
+def test_costmodel_compute_term_matches_formula():
+    cfg = get_arch("yi-6b")
+    rep = cm.estimate(cfg, "train_4k", MESH)
+    flops = 6 * cm._active_params(cfg) * 256 * 4096
+    assert rep.compute_s == pytest.approx(flops / (256 * cm.PEAK_FLOPS))
+
+
+def test_costmodel_moe_active_params():
+    cfg = get_arch("deepseek-moe-16b")
+    act = cm._active_params(cfg)
+    tot = cfg.param_count()
+    assert act < 0.35 * tot          # 6-of-64 routed + shared
+    assert act > 0.05 * tot
+
+
+def test_costmodel_tp_reduces_memory():
+    cfg = get_arch("yi-6b")
+    r16 = cm.estimate(cfg, "train_4k", cm.MeshShape(1, 16, 16))
+    r4 = cm.estimate(cfg, "train_4k", cm.MeshShape(1, 64, 4),
+                     {"batch": ("data",)})
+    assert r16.memory_s != r4.memory_s
+
+
+def test_costmodel_decode_kv_dominates():
+    cfg = get_arch("mistral-large-123b")
+    rep = cm.estimate(cfg, "decode_32k", MESH)
+    assert rep.dominant in ("memory", "collective", "compute")
+    assert rep.bytes_per_device > 0
+
+
+# ----------------------------------------------------------- autoshard
+
+def test_autoshard_beats_or_matches_baseline():
+    cfg = get_arch("deepseek-moe-16b")
+    res = autoshard.search(cfg, "train_4k", MESH, pop_size=16, n_gens=10)
+    assert res.best_report.step_s <= res.baseline.step_s * 1.0001
+    assert res.evaluations >= 16 * 10
+
+
+def test_autoshard_respects_hbm_limit():
+    # feasible case: the champion must sit under the limit
+    cfg = get_arch("yi-6b")
+    res = autoshard.search(cfg, "train_4k", MESH, pop_size=16, n_gens=10,
+                           hbm_limit=64e9)
+    assert res.best_report.bytes_per_device <= 64e9 * 1.05
+    # infeasible case (123B under 64GB w/ honest replication accounting):
+    # search still returns the least-bad layout instead of crashing
+    big = get_arch("mistral-large-123b")
+    res2 = autoshard.search(big, "train_4k", MESH, pop_size=16, n_gens=10,
+                            hbm_limit=64e9)
+    assert res2.best_report.bytes_per_device > 0
+
+
+def test_autoshard_genotype_roundtrip():
+    rules = autoshard.genotype_to_rules([0, 0, 0, 0])
+    assert rules["batch"] == ("data",)
+    log = autoshard.rules_to_logical(rules, multi_pod=False)
+    assert log.get("batch") == ("data",)
+
+
+@settings(max_examples=20, deadline=None)
+@given(genes=st.lists(st.integers(0, 10), min_size=4, max_size=4))
+def test_autoshard_any_genotype_is_legal(genes):
+    rules = autoshard.genotype_to_rules(genes)
+    assert set(rules) == {s for s, _ in autoshard.SITES}
+
+
+# ------------------------------------------------------------ hloparse
+
+def test_hloparse_scanned_matmul_flops_exact():
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), ()
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((6, 64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+    res = hloparse.analyze(comp.as_text())
+    assert res["flops"] == pytest.approx(6 * 2 * 8 * 64 * 64, rel=0.01)
+
+
+def test_hloparse_trip_count_scaling():
+    def f_n(n):
+        def f(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), ()
+            return jax.lax.scan(body, x, w)[0].sum()
+        comp = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((n, 64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+        return hloparse.analyze(comp.as_text())["flops"]
+
+    assert f_n(12) == pytest.approx(2 * f_n(6), rel=0.05)
+
+
+def test_hloparse_shape_bytes():
+    tot = lambda s: sum(b for _, b, _ in hloparse._shape_list(s))
+    assert tot("bf16[4,8]") == 64
+    assert tot("(f32[2,2], s32[3])") == 28
+    assert tot("pred[]") == 1
+
+
+# ------------------------------------------------------------- elastic
+
+def test_failure_detector():
+    fd = elastic.FailureDetector(["h0", "h1", "h2"], timeout_s=5)
+    for h in ("h0", "h1", "h2"):
+        fd.beat(h, now=100.0)
+    fd.beat("h0", now=104.0)
+    assert fd.dead(now=107.0) == ["h1", "h2"]
+    assert fd.alive(now=107.0) == ["h0"]
+
+
+def test_remesh_preserves_model_parallel():
+    plan = elastic.remesh_plan(200, model_parallel=16)
+    assert plan.shape == (12, 16)
+    assert plan.dropped_hosts == 200 - 12 * 16
+    plan2 = elastic.remesh_plan(500, model_parallel=16, pods=2)
+    assert plan2.shape == (2, 15, 16)
+    with pytest.raises(RuntimeError):
+        elastic.remesh_plan(8, model_parallel=16)
+
+
+def test_straggler_monitor():
+    m = elastic.StragglerMonitor(window=20, ratio=2.0)
+    for _ in range(18):
+        m.record(1.0)
+    assert not m.straggling()
+    for _ in range(2):
+        m.record(10.0)
+    assert m.straggling()
+    assert m.recommendation() == "rebalance"
