@@ -1,0 +1,134 @@
+"""Placement service + portfolio throughput -> BENCH_placement.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_service [--full] [--out PATH]
+
+First point on the serving-perf trajectory.  Two measurements:
+
+  * **service**: the continuous-batching placement engine runs >= 8
+    concurrent jobs batched into one compiled step; reports jobs/sec,
+    generations/sec (active-slot generations actually served) and
+    candidate evaluations/sec (gens x pop), all measured after the single
+    step compile.
+  * **portfolio**: >= 4 hyperparameter configs run as ONE vmapped jitted
+    program (`core.portfolio.run_portfolio`); verifies the champion and
+    every per-member best match equivalent independent `evolve.run` calls,
+    and reports the batched-vs-sequential speedup (both post-compile).
+
+JSON contract (consumed by future trend tooling -- keep keys stable):
+  bench, created_unix, device, jax_version, backend,
+  service.{n_slots,n_jobs,pop_size,budget_gens,gens_per_step,wall_s,
+           jobs_per_sec,gens_per_sec,evals_per_sec,step_compiles},
+  portfolio.{n_configs,n_gens,pop_size,wall_s_batched,wall_s_independent,
+             speedup,champion_matches,members_match}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import evolve, nsga2, objectives as O, portfolio
+from repro.serve.placement_service import PlacementService, make_job_specs
+
+
+def bench_service(prob, n_jobs: int, n_slots: int, pop: int, budget: int,
+                  gens_per_step: int) -> dict:
+    base = nsga2.NSGA2Config(pop_size=pop)
+    svc = PlacementService(prob, base, n_slots=n_slots,
+                           gens_per_step=gens_per_step)
+
+    # warmup: compiles the init + step programs (one job is enough)
+    svc.run_jobs(make_job_specs(1, pop, budget, seed=99))
+    svc.useful_gens, svc.total_steps = 0, 0
+
+    t0 = time.perf_counter()
+    done = svc.run_jobs(make_job_specs(n_jobs, pop, budget))
+    wall = time.perf_counter() - t0
+    assert len(done) == n_jobs and all(j.done for j in done)
+    s = svc.stats()
+    return {
+        "n_slots": n_slots, "n_jobs": n_jobs, "pop_size": pop,
+        "budget_gens": budget, "gens_per_step": gens_per_step,
+        "wall_s": round(wall, 4),
+        "jobs_per_sec": round(n_jobs / wall, 3),
+        "gens_per_sec": round(s["useful_gens"] / wall, 2),
+        "evals_per_sec": round(s["useful_gens"] * pop / wall, 1),
+        "step_compiles": s["step_compiles"],
+    }
+
+
+def bench_portfolio(prob, n_cfgs: int, pop: int, n_gens: int) -> dict:
+    etas = np.linspace(5.0, 25.0, n_cfgs)
+    muts = np.linspace(0.05, 0.3, n_cfgs)
+    cfgs = [nsga2.NSGA2Config(pop_size=pop, sbx_eta=float(e),
+                              real_mut_prob=float(m))
+            for e, m in zip(etas, muts)]
+    keys = jax.random.split(jax.random.PRNGKey(7), n_cfgs)
+
+    # batched: warmup compile, then timed steady-state call
+    portfolio.run_portfolio(prob, "nsga2", cfgs, keys=keys, n_gens=n_gens)
+    t0 = time.perf_counter()
+    res = portfolio.run_portfolio(prob, "nsga2", cfgs, keys=keys,
+                                  n_gens=n_gens)
+    wall_batched = time.perf_counter() - t0
+
+    # independent references (same keys): warmup each, then timed
+    ind_best = []
+    wall_ind = 0.0
+    for cfg, k in zip(cfgs, keys):
+        evolve.run(prob, "nsga2", cfg, k, n_gens)          # compile
+        dt, (st, _) = common.timed(evolve.run, prob, "nsga2", cfg, k, n_gens)
+        wall_ind += dt
+        ind_best.append(np.asarray(evolve.state_best_objs(st)))
+    ind_best = np.stack(ind_best)
+    members_match = bool(np.allclose(res.best_objs, ind_best, rtol=1e-5))
+    ind_champ = int(np.argmin(O.combined_metric(ind_best)))
+    return {
+        "n_configs": n_cfgs, "n_gens": n_gens, "pop_size": pop,
+        "wall_s_batched": round(wall_batched, 4),
+        "wall_s_independent": round(wall_ind, 4),
+        "speedup": round(wall_ind / max(wall_batched, 1e-9), 2),
+        "champion_matches": bool(res.champion == ind_champ),
+        "members_match": members_match,
+    }
+
+
+def main(quick: bool = True, out: str = "BENCH_placement.json") -> dict:
+    dev = "xcvu_test" if quick else "xcvu11p"
+    prob = common.problem(dev)
+    service = bench_service(
+        prob,
+        n_jobs=16 if quick else 64,
+        n_slots=8, pop=16 if quick else 64,
+        budget=16 if quick else 96,        # multiples of gens_per_step
+        gens_per_step=8)
+    pf = bench_portfolio(prob, n_cfgs=4 if quick else 8,
+                         pop=16 if quick else 64,
+                         n_gens=16 if quick else 100)
+    report = {
+        "bench": "placement_service",
+        "created_unix": int(time.time()),
+        "device": dev,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "service": service,
+        "portfolio": pf,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(json.dumps(report, indent=2))
+    print(f"\nwrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_placement.json")
+    args = ap.parse_args()
+    main(quick=not args.full, out=args.out)

@@ -30,10 +30,12 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (fig7_convergence, fig8_cooling, fig9_pipelining,
-                            roofline, table1, table2_transfer)
+    from benchmarks import (bench_service, fig7_convergence, fig8_cooling,
+                            fig9_pipelining, roofline, table1,
+                            table2_transfer)
 
     benches = {
+        "placement_service": lambda: bench_service.main(quick=quick),
         "table1_qor": lambda: table1.main(quick=quick),
         "fig7_convergence": lambda: fig7_convergence.main(quick=quick),
         "fig8_cooling": lambda: fig8_cooling.main(quick=quick),

@@ -52,7 +52,7 @@ def init_state(problem: Problem, key: jax.Array, cfg: SAConfig) -> Dict:
     z = jax.random.normal(key, (problem.continuous_dim,)) * 0.1
     objs = O.evaluate(problem, G.from_flat(problem, z))
     return {"z": z, "fit": O.scalarize(objs), "objs": objs,
-            "k": jnp.int32(0), "t_adapt": jnp.float32(cfg.t0),
+            "k": jnp.int32(0), "t_adapt": jnp.asarray(cfg.t0, jnp.float32),
             "acc_ema": jnp.float32(0.5),
             "best_z": z, "best_objs": objs}
 
@@ -86,9 +86,9 @@ def _move(problem: Problem, key: jax.Array, z: jnp.ndarray,
     ])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def step(problem: Problem, cfg: SAConfig, state: Dict, key: jax.Array
-         ) -> Dict:
+def step_impl(problem: Problem, cfg: SAConfig, state: Dict, key: jax.Array
+              ) -> Dict:
+    """Unjitted body: float config fields may be traced (portfolio)."""
     k1, k2 = jax.random.split(key)
     t = _temperature(cfg, state["k"], state["t_adapt"])
     z_new = _move(problem, k1, state["z"], cfg.move_sigma)
@@ -110,6 +110,9 @@ def step(problem: Problem, cfg: SAConfig, state: Dict, key: jax.Array
             "t_adapt": t_adapt, "acc_ema": acc_ema,
             "best_z": jnp.where(better, z, state["best_z"]),
             "best_objs": jnp.where(better, objs, state["best_objs"])}
+
+
+step = functools.partial(jax.jit, static_argnums=(0, 1))(step_impl)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 3))

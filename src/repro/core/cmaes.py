@@ -64,7 +64,7 @@ def init_state(problem: Problem, key: jax.Array, cfg: CMAESConfig,
             else jax.random.normal(key, (n,)) * 0.1)
     return {
         "mean": mean,
-        "sigma": jnp.float32(cfg.sigma0),
+        "sigma": jnp.asarray(cfg.sigma0, jnp.float32),
         "c_diag": jnp.ones(n, jnp.float32),
         "p_sigma": jnp.zeros(n, jnp.float32),
         "p_c": jnp.zeros(n, jnp.float32),
@@ -74,9 +74,9 @@ def init_state(problem: Problem, key: jax.Array, cfg: CMAESConfig,
     }
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def step(problem: Problem, cfg: CMAESConfig, state: Dict, key: jax.Array
-         ) -> Dict:
+def step_impl(problem: Problem, cfg: CMAESConfig, state: Dict, key: jax.Array
+              ) -> Dict:
+    """Unjitted body: float config fields may be traced (portfolio)."""
     n = problem.continuous_dim
     lam = cfg.lam(n)
     c = _constants(n, lam)
@@ -127,6 +127,9 @@ def step(problem: Problem, cfg: CMAESConfig, state: Dict, key: jax.Array
     return {"mean": mean, "sigma": sigma, "c_diag": c_diag,
             "p_sigma": p_sigma, "p_c": p_c, "gen": gen,
             "best_objs": best_objs, "best_z": best_z}
+
+
+step = functools.partial(jax.jit, static_argnums=(0, 1))(step_impl)
 
 
 def best_genotype(problem: Problem, state: Dict) -> Tuple[G.Genotype,

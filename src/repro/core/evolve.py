@@ -21,8 +21,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import hyper
 from repro.core import objectives as O
 from repro.fpga.netlist import Problem
+
+from repro.runtime.jaxcompat import make_mesh as _make_mesh
+from repro.runtime.jaxcompat import shard_map as _shard_map
 
 ALGOS = ("nsga2", "cmaes", "sa", "ga")
 
@@ -51,20 +55,30 @@ def state_best_objs(state: Dict) -> jnp.ndarray:
     return state["objs"]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 4))
-def run(problem: Problem, algo: str, cfg, key: jax.Array, n_gens: int
-        ) -> Tuple[Dict, jnp.ndarray]:
-    """Full optimization in one program.  Returns (state, history[n_gens,2])."""
+def _run_impl(problem: Problem, algo: str, cfg, key: jax.Array, n_gens: int
+              ) -> Tuple[Dict, jnp.ndarray]:
+    """Unjitted full run; float config fields may be JAX tracers.
+
+    Float hyperparameters are forced to f32 here so the static path (`run`)
+    and the vmapped portfolio path (`core.portfolio`) execute identical
+    arithmetic -- batched results match independent runs.
+    """
     m = get_algo(algo)
+    cfg = hyper.tracify(cfg)
     k_init, k_run = jax.random.split(key)
     state = m.init_state(problem, k_init, cfg)
 
     def body(st, k):
-        st = m.step(problem, cfg, st, k)
+        st = m.step_impl(problem, cfg, st, k)
         return st, state_best_objs(st)
 
     state, hist = jax.lax.scan(body, state, jax.random.split(k_run, n_gens))
     return state, hist
+
+
+run = functools.partial(jax.jit, static_argnums=(0, 1, 2, 4))(_run_impl)
+run.__doc__ = ("Full optimization in one program.  "
+               "Returns (state, history[n_gens,2]).")
 
 
 def run_islands(problem: Problem, algo: str, cfg, key: jax.Array,
@@ -80,8 +94,7 @@ def run_islands(problem: Problem, algo: str, cfg, key: jax.Array,
     if mesh is None:
         n = jax.device_count()
         axis = axis if isinstance(axis, str) else "data"
-        mesh = jax.make_mesh((n,), (axis,),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _make_mesh((n,), (axis,))
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     n_islands = 1
     for a in axes:
@@ -92,7 +105,7 @@ def run_islands(problem: Problem, algo: str, cfg, key: jax.Array,
     run_keys = jax.random.split(jax.random.fold_in(key, 7), n_islands)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, check_vma=False,
+        _shard_map, mesh=mesh,
         in_specs=(P(axis), P(axis)), out_specs=(P(axis), P(axis)))
     def evolve_shard(state, keys):
         st = jax.tree.map(lambda a: a[0], state)

@@ -47,9 +47,9 @@ def init_state(problem: Problem, key: jax.Array, cfg: GAConfig) -> Dict:
     return {"pop": pop, "objs": objs}
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def step(problem: Problem, cfg: GAConfig, state: Dict, key: jax.Array
-         ) -> Dict:
+def step_impl(problem: Problem, cfg: GAConfig, state: Dict, key: jax.Array
+              ) -> Dict:
+    """Unjitted body: float config fields may be traced (portfolio)."""
     pop, objs = state["pop"], state["objs"]
     p = cfg.pop_size
     fit = O.scalarize(objs)
@@ -73,3 +73,6 @@ def step(problem: Problem, cfg: GAConfig, state: Dict, key: jax.Array
     order = jnp.argsort(O.scalarize(allobjs))[:p]
     return {"pop": jax.tree.map(lambda a: a[order], allpop),
             "objs": allobjs[order]}
+
+
+step = functools.partial(jax.jit, static_argnums=(0, 1))(step_impl)

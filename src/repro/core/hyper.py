@@ -1,0 +1,102 @@
+"""Hyperparameter pytree utilities: one compiled program, many configs.
+
+The algorithm configs (``NSGA2Config``, ``GAConfig``, ``CMAESConfig``,
+``SAConfig``) are frozen dataclasses whose fields fall into two camps:
+
+  * **static** fields -- ints, bools, strings -- that determine array
+    shapes, scan lengths, or Python branches (``pop_size``, ``perm_swaps``,
+    ``reduced``, ``schedule``).  These must be baked into the compiled
+    program; two configs that differ here need two programs.
+  * **traced** fields -- floats -- that are ordinary scalar operands of the
+    computation (``sbx_eta``, ``real_mut_prob``, ``t0``, ...).  These can be
+    JAX values, which means a *batch axis of configs* can ride a single
+    ``vmap``/``jit`` program: the hyperparameter-portfolio trick.
+
+``split_config`` separates the two; the static half becomes a hashable key
+(usable with ``jit`` ``static_argnums``), the traced half a ``{name: float}``
+dict that vmap/jit treat as a pytree.  ``stack_configs`` batches K configs
+that agree on the static half into ``{name: f32[K]}``.  ``tracify`` converts
+a config's float fields to f32 scalars so the *same* f32 arithmetic runs
+whether a config travels the static path (``evolve.run``) or a portfolio
+batch axis -- this is what makes batched and independent runs bit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# (config class, ((name, value), ...)) -- hashable, jit-static-safe
+StaticKey = Tuple[type, Tuple[Tuple[str, Any], ...]]
+
+
+_STATIC_ANNOTATIONS = {"int", "bool", "str"}
+
+
+def _is_traced_field(f: dataclasses.Field) -> bool:
+    """Classify by the *declared* type, not the runtime value: a float
+    hyperparameter passed as a Python int (``sbx_eta=20``) must still ride
+    the traced path, and an already-traced value has no useful type."""
+    t = f.type
+    name = t if isinstance(t, str) else getattr(t, "__name__", str(t))
+    if name == "float":
+        return True
+    if name in _STATIC_ANNOTATIONS:
+        return False
+    raise TypeError(
+        f"config field {f.name!r} must be annotated int/bool/str/float "
+        f"to ride a portfolio, got {name!r}")
+
+
+def split_config(cfg) -> Tuple[StaticKey, Dict[str, float]]:
+    """Dataclass config -> (hashable static key, traced float dict)."""
+    static, traced = [], {}
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if _is_traced_field(f):
+            traced[f.name] = float(v)
+        else:
+            static.append((f.name, v))
+    return (type(cfg), tuple(static)), traced
+
+
+def merge_config(static_key: StaticKey, traced: Dict[str, Any]):
+    """Rebuild a config instance; traced values may be JAX tracers."""
+    cls, static = static_key
+    return cls(**dict(static), **traced)
+
+
+def tracify(cfg):
+    """Float fields -> f32 scalars (concrete or traced), rest untouched.
+
+    Run inside every jitted driver so constants fold at f32 precision --
+    identical arithmetic to the vmapped-portfolio path.
+    """
+    kwargs = {}
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        kwargs[f.name] = (jnp.asarray(v, jnp.float32)
+                          if _is_traced_field(f) else v)
+    return type(cfg)(**kwargs)
+
+
+def stack_configs(cfgs: Sequence) -> Tuple[StaticKey, Dict[str, jnp.ndarray]]:
+    """K configs sharing the static half -> (static key, {name: f32[K]}).
+
+    Raises if any member disagrees on a static field: those need their own
+    compiled program (a separate portfolio / service pool).
+    """
+    if not cfgs:
+        raise ValueError("empty portfolio")
+    splits = [split_config(c) for c in cfgs]
+    static_key = splits[0][0]
+    for c, (sk, _) in zip(cfgs, splits):
+        if sk != static_key:
+            raise ValueError(
+                "portfolio members must agree on static fields "
+                f"(shapes/branches); {c} differs from {cfgs[0]}")
+    names = splits[0][1].keys()
+    stacked = {n: jnp.asarray([t[n] for _, t in splits], jnp.float32)
+               for n in names}
+    return static_key, stacked

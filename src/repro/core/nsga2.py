@@ -226,9 +226,12 @@ def _eval_reduced(problem: Problem, perms) -> jnp.ndarray:
     return jax.vmap(one)(perms)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def step(problem: Problem, cfg: NSGA2Config, state, key):
-    """One NSGA-II generation: P children, (mu+lambda) truncation."""
+def step_impl(problem: Problem, cfg: NSGA2Config, state, key):
+    """One NSGA-II generation: P children, (mu+lambda) truncation.
+
+    Unjitted body: float config fields may be JAX tracers (portfolio
+    batching); only `pop_size`, `perm_swaps`, `reduced` must be concrete.
+    """
     pop, objs = state["pop"], state["objs"]
     p = cfg.pop_size
     rank = nondominated_rank(objs)
@@ -251,6 +254,9 @@ def step(problem: Problem, cfg: NSGA2Config, state, key):
     order = _lexsort_rank_crowd(arank, acrowd)[:p]
     return {"pop": jax.tree.map(lambda a: a[order], allpop),
             "objs": allobjs[order]}
+
+
+step = functools.partial(jax.jit, static_argnums=(0, 1))(step_impl)
 
 
 def best(state) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,0 +1,213 @@
+"""Hyperparameter-portfolio runner: many placement runs, ONE compiled program.
+
+RapidLayout's edge is wall-clock (paper Table I), and on accelerators
+wall-clock comes from batch: GPU-batched placers evaluate thousands of
+candidates per launch.  This module lifts that one level up -- instead of
+batching candidates *within* one evolutionary run, it batches K whole
+(config, seed) runs of `evolve.run` into a single jitted program via `vmap`
+over the traced hyperparameters (`core.hyper`).  A portfolio of NSGA-II
+configs with different `sbx_eta` / mutation rates races in the time of one.
+
+Two entry points:
+
+  * `run_portfolio`  -- fixed budget: all K members run `n_gens` generations
+    in one program; per-member results match K independent `evolve.run`
+    calls with the same keys (both paths route through `hyper.tracify`, so
+    all hyperparameter arithmetic is f32 -- exact equality observed on CPU,
+    verified to 1e-5 relative in tests/bench to stay robust to backends
+    whose vmapped reductions round differently in the last bits).
+  * `race`           -- early champion selection: members advance in rounds
+    of `gens_per_round` generations (one compiled program per round shape,
+    reused across rounds); between rounds the host checks the champion's
+    `combined_metric` and stops once it stalls for `patience` rounds.
+
+Static config fields (pop_size, perm_swaps, reduced, schedule) must agree
+across members -- they fix shapes and branches of the compiled program.
+Members that disagree belong in separate portfolios (or service pools).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import evolve, hyper
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+
+# --------------------------------------------------------- member programs
+
+def member_init(problem: Problem, algo: str, static_key: hyper.StaticKey,
+                traced: Dict[str, jnp.ndarray], key: jax.Array) -> Dict:
+    """Init one member's algorithm state (float hyperparams may be traced)."""
+    cfg = hyper.tracify(hyper.merge_config(static_key, traced))
+    return evolve.get_algo(algo).init_state(problem, key, cfg)
+
+
+def member_round(problem: Problem, algo: str, static_key: hyper.StaticKey,
+                 n_gens: int, traced: Dict[str, jnp.ndarray], state: Dict,
+                 key: jax.Array) -> Tuple[Dict, jnp.ndarray]:
+    """Advance one member `n_gens` generations; returns (state, best objs)."""
+    cfg = hyper.tracify(hyper.merge_config(static_key, traced))
+    m = evolve.get_algo(algo)
+
+    def body(st, k):
+        return m.step_impl(problem, cfg, st, k), None
+
+    state, _ = jax.lax.scan(body, state, jax.random.split(key, n_gens))
+    return state, evolve.state_best_objs(state)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 5))
+def _vrun(problem, algo, static_key, traced, keys, n_gens):
+    """K full runs in one program: vmap of `evolve._run_impl` over members."""
+    return jax.vmap(
+        lambda tr, k: evolve._run_impl(problem, algo,
+                                       hyper.merge_config(static_key, tr),
+                                       k, n_gens))(traced, keys)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _vinit(problem, algo, static_key, traced, keys):
+    return jax.vmap(
+        lambda tr, k: member_init(problem, algo, static_key, tr, k)
+    )(traced, keys)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 6))
+def _vround(problem, algo, static_key, traced, states, keys, n_gens):
+    return jax.vmap(
+        lambda tr, st, k: member_round(problem, algo, static_key, n_gens,
+                                       tr, st, k))(traced, states, keys)
+
+
+# ------------------------------------------------------------- fixed budget
+
+@dataclasses.dataclass
+class PortfolioResult:
+    states: Dict                 # stacked member states (leading K axis)
+    history: np.ndarray          # [K, n_gens, 2] per-gen best objectives
+    best_objs: np.ndarray        # [K, 2] final best per member
+    metric: np.ndarray           # [K] combined metric per member
+    champion: int                # argmin(metric)
+
+    def member_state(self, i: int) -> Dict:
+        return jax.tree.map(lambda a: a[i], self.states)
+
+    @property
+    def champion_objs(self) -> np.ndarray:
+        return self.best_objs[self.champion]
+
+
+def run_portfolio(problem: Problem, algo: str, cfgs: Sequence,
+                  key: Optional[jax.Array] = None, n_gens: int = 50,
+                  keys: Optional[jax.Array] = None) -> PortfolioResult:
+    """Run K = len(cfgs) (config, seed) members in one jitted program.
+
+    `keys` gives each member its PRNG key explicitly ([K]-stacked); with
+    only `key`, members get `jax.random.split(key, K)`.  Per-member results
+    match `evolve.run(problem, algo, cfgs[i], keys[i], n_gens)`.
+    """
+    static_key, traced = hyper.stack_configs(cfgs)
+    if keys is None:
+        if key is None:
+            raise ValueError("pass key= or keys=")
+        keys = jax.random.split(key, len(cfgs))
+    states, hist = _vrun(problem, algo, static_key, traced, keys, n_gens)
+    best = np.asarray(jax.vmap(evolve.state_best_objs)(states))
+    metric = np.asarray(O.combined_metric(jnp.asarray(best)))
+    return PortfolioResult(states=states, history=np.asarray(hist),
+                           best_objs=best, metric=metric,
+                           champion=int(np.argmin(metric)))
+
+
+# ------------------------------------------------------------------ racing
+
+@dataclasses.dataclass
+class RaceResult:
+    states: Dict                 # stacked member states at stop time
+    history: np.ndarray          # [rounds, K, 2] best objs after each round
+    best_objs: np.ndarray        # [K, 2]
+    metric: np.ndarray           # [K]
+    champion: int
+    rounds: int                  # rounds actually run (<= max budget)
+    gens: int                    # generations per member actually run
+
+    def member_state(self, i: int) -> Dict:
+        return jax.tree.map(lambda a: a[i], self.states)
+
+    @property
+    def champion_objs(self) -> np.ndarray:
+        return self.best_objs[self.champion]
+
+
+def race(problem: Problem, algo: str, cfgs: Sequence, key: jax.Array,
+         max_gens: int = 200, gens_per_round: int = 10,
+         patience: int = 2, rtol: float = 1e-3) -> RaceResult:
+    """Portfolio racing with early champion selection.
+
+    All members advance together in rounds (one compiled round program,
+    reused -- no recompiles); after each round the champion's combined
+    metric is checked on the host, and the race stops early once it fails
+    to improve by a relative `rtol` for `patience` consecutive rounds.
+    """
+    if max_gens < 1:
+        raise ValueError(f"max_gens must be >= 1, got {max_gens}")
+    static_key, traced = hyper.stack_configs(cfgs)
+    k_init, k_run = jax.random.split(key)
+    states = _vinit(problem, algo, static_key, traced,
+                    jax.random.split(k_init, len(cfgs)))
+    # budgets quantize UP to whole rounds, same convention as
+    # PlacementService.submit(): ask for 15 gens in rounds of 10, get 20
+    gens_per_round = min(gens_per_round, max_gens)
+    n_rounds = -(-max_gens // gens_per_round)
+    best_metric, stall = np.inf, 0
+    hist: List[np.ndarray] = []
+    rounds = 0
+    best = None
+    for r in range(n_rounds):
+        keys = jax.random.split(jax.random.fold_in(k_run, r), len(cfgs))
+        states, best = _vround(problem, algo, static_key, traced, states,
+                               keys, gens_per_round)
+        rounds = r + 1
+        best = np.asarray(best)
+        hist.append(best)
+        m = float(np.min(O.combined_metric(best)))
+        if m < best_metric * (1.0 - rtol):
+            best_metric, stall = m, 0
+        else:
+            stall += 1
+            if stall >= patience:
+                break
+    metric = np.asarray(O.combined_metric(best))
+    return RaceResult(states=states, history=np.stack(hist),
+                      best_objs=best, metric=metric,
+                      champion=int(np.argmin(metric)), rounds=rounds,
+                      gens=rounds * gens_per_round)
+
+
+# --------------------------------------------------------------- champions
+
+def best_genotype(problem: Problem, algo: str, state: Dict,
+                  cfg=None) -> Tuple[G.Genotype, jnp.ndarray]:
+    """Extract the best full genotype + objectives from one member's state.
+
+    Handles population states (`pop`/`objs`), flat-encoding states
+    (`best_z`, CMA-ES / SA), and the NSGA-II reduced (mapping-only) pop,
+    which is lifted back to the full composite encoding.
+    """
+    if "best_z" in state:
+        return (G.from_flat(problem, jnp.asarray(state["best_z"])),
+                jnp.asarray(state["best_objs"]))
+    objs = jnp.asarray(state["objs"])
+    i = jnp.argmin(O.combined_metric(objs))
+    g = jax.tree.map(lambda a: jnp.asarray(a)[i], state["pop"])
+    if cfg is not None and getattr(cfg, "reduced", False):
+        g = G.reduced_to_full(problem, g)
+    return g, objs[i]

@@ -1,22 +1,67 @@
-"""Serving launcher: reduced-config engine locally, full config via dry-run.
+"""Serving launcher: LM engine or the placement service.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --dry-run
+    PYTHONPATH=src python -m repro.launch.serve --placement --device xcvu_test
+
+`--placement` runs the batched placement-as-a-service engine
+(`serve.placement_service`): a fixed slot pool continuously batches many
+concurrent placement jobs for one FPGA device into a single jitted step.
 """
 import argparse
 import os
 
 
+def placement_main(args) -> None:
+    import time
+
+    from repro.core import nsga2
+    from repro.fpga import device, netlist
+    from repro.serve.placement_service import (PlacementService,
+                                               make_job_specs)
+
+    prob = netlist.make_problem(device.get_device(args.device))
+    base = nsga2.NSGA2Config(pop_size=args.pop)
+    svc = PlacementService(prob, base, n_slots=args.slots,
+                           gens_per_step=args.gens_per_step)
+    specs = make_job_specs(args.requests, args.pop, args.gens)
+    t0 = time.perf_counter()
+    done = svc.run_jobs(specs)
+    dt = time.perf_counter() - t0
+    for j in sorted(done, key=lambda j: j.jid):
+        print(f"job{j.jid}: {j.gens} gens  wl2={j.best_objs[0]:.3e}  "
+              f"bbox={j.best_objs[1]:.0f}  metric={j.metric:.3e}")
+    s = svc.stats()
+    print(f"{len(done)} jobs in {dt:.2f}s "
+          f"({len(done)/dt:.2f} jobs/s, {s['useful_gens']/dt:.1f} gens/s) "
+          f"on {args.slots} slots; step compiles: {s['step_compiles']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    # placement-service mode
+    ap.add_argument("--placement", action="store_true",
+                    help="serve placement jobs instead of an LM")
+    ap.add_argument("--device", default="xcvu_test")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--pop", type=int, default=32)
+    ap.add_argument("--gens", type=int, default=64,
+                    help="generation budget per placement job")
+    ap.add_argument("--gens-per-step", type=int, default=4)
     args = ap.parse_args()
+
+    if args.placement:
+        placement_main(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --placement is given")
 
     if args.dry_run:
         import subprocess

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime import jaxcompat
 from repro.kernels import ops
 from repro.models import modules as nn
 from repro.sharding import logical
@@ -248,8 +249,8 @@ def decode_step(p, a: AttnArgs, x1: jnp.ndarray, cache: Dict[str, jnp.ndarray],
             out = og / jnp.maximum(lg, 1e-30)[..., None]
             return out.astype(x1.dtype), kc, vc
 
-        out, kc, vc = jax.shard_map(
-            shard_fn, mesh=mesh, check_vma=False,
+        out, kc, vc = jaxcompat.shard_map(
+            shard_fn, mesh=mesh,
             in_specs=(repl, P(bspec, None, None, None),
                       P(bspec, None, None, None), cache_spec, cache_spec,
                       P(bspec)),

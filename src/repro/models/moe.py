@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime import jaxcompat
 from repro.models import modules as nn
 from repro.sharding import logical
 
@@ -164,8 +165,8 @@ def _apply_ep(p, a: MoEArgs, xf: jnp.ndarray, mesh, rules
         return y, aux
 
     wspec3 = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
-    y, aux = jax.shard_map(
-        shard_fn, mesh=mesh, check_vma=False,
+    y, aux = jaxcompat.shard_map(
+        shard_fn, mesh=mesh,
         in_specs=(bspec, P(None, None), wspec3, wspec3, wspec3),
         out_specs=(bspec, P()),
     )(xf, p["router"], p["wg"], p["wu"], p["wd"])

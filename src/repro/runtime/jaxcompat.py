@@ -1,0 +1,43 @@
+"""Version-spanning shims for jax APIs that moved between releases.
+
+The container pins jax 0.4.x while parts of this codebase were written
+against the current API.  Two call sites drifted:
+
+  * `shard_map`: top-level `jax.shard_map(..., check_vma=)` now,
+    `jax.experimental.shard_map.shard_map(..., check_rep=)` on 0.4.x.
+  * `jax.make_mesh`: grew an `axis_types=` kwarg (`jax.sharding.AxisType`)
+    after 0.4.x; plain construction is equivalent for our Auto meshes.
+
+Route every mesh/shard_map use through here so a jax upgrade is a
+one-file change.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, check_vma=False,
+                             in_specs=in_specs, out_specs=out_specs)
+else:                                                  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_04(f, mesh=mesh, check_rep=False,
+                             in_specs=in_specs, out_specs=out_specs)
+
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape, names) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with Auto axis types where the API supports them.
+
+    Resolved once at import (like the shard_map shim above) so a caller's
+    own TypeError is never masked by a version-probe retry.
+    """
+    if _HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            shape, names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return jax.make_mesh(shape, names)                 # jax <= 0.4.x

@@ -1,0 +1,256 @@
+"""Placement-as-a-service: slot-based continuous batching of placement jobs.
+
+Mirrors the serving discipline of `serve.engine.Engine` (fixed KV-cache
+slot pool, masked batched decode) for evolutionary placement: a fixed pool
+of `n_slots` *job slots* shares one compiled step program for a single
+device/problem.
+
+  submit()  -> pick a free slot, initialise the job's algorithm state into
+               it (its own seed + float hyperparameters; one jitted init)
+  step()    -> ONE batched jitted call advances every slot by
+               `gens_per_step` generations (vmap over the slot axis;
+               per-slot hyperparameters ride as traced f32 operands)
+  finished  -> jobs whose generation budget is exhausted -- or whose
+               combined metric hit their `target` -- are harvested (best
+               genotype + objectives), the slot is freed
+
+Jobs are reproducible: every step key derives from the *job's* seed and
+its own generation counter (never a shared service stream), so a job's
+result is a pure function of (config, seed, budget, gens_per_step) --
+independent of co-tenant jobs and admission timing.
+
+Shapes are static: jobs come and go by overwriting slot *contents* (state
+arrays, hyperparameter rows, mask entries), never shapes, so `step()` never
+recompiles -- the TPU-friendly serving discipline, now for placement
+traffic.  Vacant slots keep evolving whatever state they hold; their work
+is masked out of accounting and their results are never read.
+
+Static config fields (pop_size, perm_swaps, reduced, ...) are fixed per
+pool at construction: they are baked into the compiled step.  Jobs whose
+config disagrees on those belong in a different pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hyper, portfolio
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+
+def make_job_specs(n: int, pop_size: int, budget: int, seed: int = 0,
+                   eta_range=(5.0, 25.0), mut_range=(0.05, 0.3)
+                   ) -> List[Dict]:
+    """Synthetic placement workload: n NSGA-II jobs with jittered float
+    hyperparameters (shared by the CLI demo, the example, and the bench,
+    so they all exercise the same traffic shape)."""
+    from repro.core import nsga2
+    rng = np.random.default_rng(seed)
+    return [dict(seed=seed * 10_000 + i, budget=budget,
+                 cfg=nsga2.NSGA2Config(
+                     pop_size=pop_size,
+                     sbx_eta=float(rng.uniform(*eta_range)),
+                     real_mut_prob=float(rng.uniform(*mut_range))))
+            for i in range(n)]
+
+
+@dataclasses.dataclass
+class PlacementJob:
+    jid: int
+    cfg: Any                       # full config (floats may differ per job)
+    seed: int
+    budget: int                    # generation budget
+    target: Optional[float]        # finish early if combined metric <= this
+    slot: int = -1
+    gens: int = 0                  # generations run so far
+    done: bool = False
+    best_objs: Optional[np.ndarray] = None   # [2] = (wl^2, max bbox)
+    metric: float = float("inf")             # combined metric of best_objs
+    genotype: Any = None                     # best full genotype at harvest
+
+
+class PlacementService:
+    """Continuous-batching placement engine for one `Problem`."""
+
+    def __init__(self, problem: Problem, base_cfg, algo: str = "nsga2",
+                 n_slots: int = 8, gens_per_step: int = 4, seed: int = 0):
+        self.problem, self.algo = problem, algo
+        self.n_slots, self.gens_per_step = n_slots, gens_per_step
+        self.static_key, base_traced = hyper.split_config(base_cfg)
+        self.base_cfg = base_cfg
+        # host mirror of the per-slot traced hyperparameters
+        self.traced = {k: np.full(n_slots, v, np.float32)
+                       for k, v in base_traced.items()}
+        self.active = np.zeros(n_slots, bool)
+        self.slot_job: List[Optional[PlacementJob]] = [None] * n_slots
+        # per-slot (seed, generation counter): step keys derive from the
+        # *job's* seed, never a shared stream, so a job's trajectory is a
+        # pure function of (seed, budget, gens_per_step) -- identical on an
+        # empty or a fully-loaded pool, reproducible across submissions
+        self.slot_seed = np.zeros(n_slots, np.uint32)
+        self.slot_gens = np.zeros(n_slots, np.int32)
+        self.next_jid = 0
+        self.key = jax.random.PRNGKey(seed)
+        self.total_steps = 0
+        self.useful_gens = 0       # active-slot generations actually served
+
+        # per-pool jitted programs; problem/algo/static config are closure
+        # constants, so each compiles exactly once for the pool's shapes.
+        # Step keys derive inside the program from (slot seed, slot gens),
+        # so the host ships two small int arrays, not key material.
+        self._init_fn = jax.jit(functools.partial(
+            portfolio.member_init, problem, algo, self.static_key))
+
+        def _step(traced, states, seeds, gens):
+            def one(tr, st, s, g):
+                key = jax.random.fold_in(jax.random.PRNGKey(s), g)
+                return portfolio.member_round(
+                    problem, algo, self.static_key, gens_per_step,
+                    tr, st, key)
+            return jax.vmap(one)(traced, states, seeds, gens)
+
+        self._step_fn = jax.jit(_step)
+
+        # fill the pool with throwaway states so step() shapes exist from
+        # the first call (vacant slots evolve garbage; it is never read)
+        k_fill = jax.random.fold_in(self.key, 0x5eed)
+        self.states = portfolio._vinit(problem, algo, self.static_key,
+                                       self._traced_dev(),
+                                       jax.random.split(k_fill, n_slots))
+
+    # ------------------------------------------------------------- admit
+
+    def submit(self, cfg=None, seed: Optional[int] = None, budget: int = 64,
+               target: Optional[float] = None) -> Optional[int]:
+        """Admit one job; returns its jid, or None if the pool is full.
+
+        Budgets are quantized UP to the pool's `gens_per_step` granularity
+        (the batched step advances whole steps only); `job.budget` records
+        the quantized value, which the job then runs exactly.
+        """
+        cfg = self.base_cfg if cfg is None else cfg
+        budget = -(-budget // self.gens_per_step) * self.gens_per_step
+        static_key, traced = hyper.split_config(cfg)
+        if static_key != self.static_key:
+            raise ValueError(
+                "job config disagrees with the pool's static fields "
+                f"({static_key[1]} vs {self.static_key[1]}); "
+                "open a separate pool for it")
+        free = np.where(~self.active)[0]
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        seed = self.next_jid if seed is None else seed
+        job = PlacementJob(self.next_jid, cfg, seed, budget, target,
+                           slot=slot)
+        self.next_jid += 1
+        state1 = self._init_fn(
+            {k: jnp.float32(v) for k, v in traced.items()},
+            jax.random.PRNGKey(seed))
+        # splice the single job state into the pool at `slot`
+        self.states = jax.tree.map(
+            lambda pool, one: pool.at[slot].set(one), self.states, state1)
+        for k, v in traced.items():
+            self.traced[k][slot] = v
+        self._traced_cache = None          # hyperparameter row changed
+        self.slot_seed[slot] = np.uint32(seed)
+        self.slot_gens[slot] = 0
+        self.active[slot] = True
+        self.slot_job[slot] = job
+        return job.jid
+
+    # -------------------------------------------------------------- step
+
+    _traced_cache: Optional[Dict[str, jnp.ndarray]] = None
+
+    def _traced_dev(self) -> Dict[str, jnp.ndarray]:
+        """Device copy of the per-slot hyperparameters, re-uploaded only
+        when submit() changed a row (the step loop reuses the cache).
+
+        jnp.array (copy=True), NOT asarray: CPU jax may zero-copy a numpy
+        buffer, and submit() mutates these mirrors in place -- an aliased
+        buffer would let a later submit corrupt an in-flight step."""
+        if self._traced_cache is None:
+            self._traced_cache = {k: jnp.array(v)
+                                  for k, v in self.traced.items()}
+        return self._traced_cache
+
+    def step(self) -> List[PlacementJob]:
+        """Advance every slot `gens_per_step` generations in one jitted
+        call; harvest and return newly finished jobs."""
+        if not self.active.any():
+            return []
+        # jnp.array copies: the numpy mirrors are mutated in place below
+        # and by submit(), and CPU jax may otherwise alias their buffers
+        # while the dispatched step is still consuming them
+        self.states, best = self._step_fn(
+            self._traced_dev(), self.states,
+            jnp.array(self.slot_seed), jnp.array(self.slot_gens))
+        self.total_steps += 1
+        self.useful_gens += int(self.active.sum()) * self.gens_per_step
+        self.slot_gens += self.gens_per_step
+        best = np.asarray(best)
+        metric = np.asarray(O.combined_metric(best))
+        finished = []
+        for slot in np.where(self.active)[0]:
+            job = self.slot_job[slot]
+            job.gens += self.gens_per_step
+            job.best_objs = best[slot]
+            job.metric = float(metric[slot])
+            hit_target = job.target is not None and job.metric <= job.target
+            if job.gens >= job.budget or hit_target:
+                self._harvest(slot, job)
+                finished.append(job)
+                self.active[slot] = False
+                self.slot_job[slot] = None
+        return finished
+
+    def _harvest(self, slot: int, job: PlacementJob) -> None:
+        state = jax.tree.map(lambda a: a[slot], self.states)
+        g, objs = portfolio.best_genotype(self.problem, self.algo, state,
+                                          job.cfg)
+        job.genotype = jax.tree.map(np.asarray, g)
+        job.best_objs = np.asarray(objs)
+        job.metric = float(O.combined_metric(job.best_objs))
+        job.done = True
+
+    # ------------------------------------------------------- conveniences
+
+    @property
+    def step_compiles(self) -> int:
+        """Distinct compilations of the batched step (must stay 1).
+
+        Reads jax's private jit-cache counter; returns -1 (unknown) if a
+        jax upgrade removes it, rather than breaking the service."""
+        try:
+            return self._step_fn._cache_size()
+        except AttributeError:
+            return -1
+
+    def run_jobs(self, specs: List[Dict]) -> List[PlacementJob]:
+        """Rolling admission: submit specs as slots free up, step until
+        every job finishes.  Each spec is submit() kwargs."""
+        queue = list(specs)
+        done: List[PlacementJob] = []
+        while queue or self.active.any():
+            while queue:
+                if self.submit(**queue[0]) is None:
+                    break
+                queue.pop(0)
+            done.extend(self.step())
+        return done
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_slots": self.n_slots,
+            "gens_per_step": self.gens_per_step,
+            "steps": self.total_steps,
+            "useful_gens": self.useful_gens,
+            "step_compiles": self.step_compiles,
+        }

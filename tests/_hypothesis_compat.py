@@ -1,0 +1,76 @@
+"""`hypothesis` if installed, else a tiny deterministic fallback.
+
+The seed image ships without hypothesis, which used to make the whole
+suite fail at collection.  Property tests import `given`, `settings`, `st`
+from here instead: with hypothesis installed they get the real engine
+(shrinking, the full strategy zoo); without it they get a minimal
+deterministic sampler covering exactly the strategy subset these tests
+use (`st.integers`).  Fallback draws are seeded from a CRC of the test
+name, so bare-environment runs are reproducible.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _IntStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            self.lo, self.hi = min_value, max_value
+
+        def sample(self, rng: np.random.Generator):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _ListStrategy:
+        def __init__(self, elements, min_size: int, max_size: int):
+            self.elements, self.lo, self.hi = elements, min_size, max_size
+
+        def sample(self, rng: np.random.Generator):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return [self.elements.sample(rng) for _ in range(n)]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, min_size: int = 0,
+                  max_size: int = 10) -> _ListStrategy:
+            return _ListStrategy(elements, min_size, max_size)
+
+    st = _Strategies()
+
+    _DEFAULT_EXAMPLES = 20
+
+    def given(**strategies):
+        def deco(fn):
+            # deliberately NOT functools.wraps: pytest must see the
+            # zero-argument wrapper signature, not the strategy params
+            # (it would otherwise look for fixtures named `seed` etc.)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # honor @settings applied in either decorator order, like the
+            # real hypothesis: below @given it already stamped fn
+            wrapper._max_examples = getattr(fn, "_max_examples",
+                                            _DEFAULT_EXAMPLES)
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -5,6 +5,8 @@ import sys
 # benches must see the real single CPU device; only launch/dryrun.py forces
 # the 512-device placeholder topology (and only in its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make tests/_hypothesis_compat.py importable regardless of invocation dir
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax  # noqa: E402
 

@@ -1,0 +1,148 @@
+"""Portfolio runner + placement service: batching must not change answers.
+
+Covers the tentpole's two contracts:
+  * `run_portfolio` (K configs in ONE vmapped jitted program) returns, per
+    member, exactly what K independent `evolve.run` calls return with the
+    same keys -- history, best objectives, and champion.
+  * `PlacementService` finishes every submitted job with a legal placement
+    while the batched `step()` program compiles exactly once across the
+    whole job stream (continuous batching, static shapes).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cmaes, evolve, hyper, nsga2, portfolio
+from repro.core import objectives as O
+from repro.fpga import device, netlist
+from repro.serve.placement_service import PlacementService
+
+PROB = netlist.make_problem(device.get_device("xcvu_test"))
+KEY = jax.random.PRNGKey(0)
+
+CFGS = [nsga2.NSGA2Config(pop_size=8, sbx_eta=e, real_mut_prob=m)
+        for e, m in [(15.0, 0.1), (5.0, 0.2), (25.0, 0.05), (15.0, 0.3)]]
+
+
+# ------------------------------------------------------------- portfolio
+
+def test_portfolio_matches_independent_runs():
+    keys = jax.random.split(KEY, len(CFGS))
+    res = portfolio.run_portfolio(PROB, "nsga2", CFGS, keys=keys, n_gens=6)
+    ind_best = []
+    for i, (cfg, k) in enumerate(zip(CFGS, keys)):
+        st, hist = evolve.run(PROB, "nsga2", cfg, k, 6)
+        np.testing.assert_allclose(res.history[i], np.asarray(hist),
+                                   rtol=1e-5)
+        ind_best.append(np.asarray(evolve.state_best_objs(st)))
+    ind_best = np.stack(ind_best)
+    np.testing.assert_allclose(res.best_objs, ind_best, rtol=1e-5)
+    assert res.champion == int(np.argmin(O.combined_metric(ind_best)))
+
+
+def test_portfolio_rejects_mixed_static_fields():
+    with pytest.raises(ValueError):
+        hyper.stack_configs([nsga2.NSGA2Config(pop_size=8),
+                             nsga2.NSGA2Config(pop_size=16)])
+
+
+def test_float_fields_classified_by_annotation_not_value():
+    # sbx_eta=20 (a Python int) is still a float *field*: it must land on
+    # the traced side, identical to sbx_eta=20.0, not become a static key
+    sk_int, tr_int = hyper.split_config(nsga2.NSGA2Config(sbx_eta=20))
+    sk_flt, tr_flt = hyper.split_config(nsga2.NSGA2Config(sbx_eta=20.0))
+    assert sk_int == sk_flt and tr_int == tr_flt
+    hyper.stack_configs([nsga2.NSGA2Config(sbx_eta=20),
+                         nsga2.NSGA2Config(sbx_eta=20.0)])
+
+
+def test_race_early_stops_and_improves():
+    rr = portfolio.race(PROB, "nsga2", CFGS, KEY, max_gens=40,
+                        gens_per_round=4, patience=1)
+    assert 1 <= rr.rounds <= 10 and rr.gens == rr.rounds * 4
+    assert rr.history.shape == (rr.rounds, len(CFGS), 2)
+    # champion is the argmin of the final per-member metrics
+    assert rr.champion == int(np.argmin(rr.metric))
+    # racing never makes the champion worse than round 0's best
+    assert rr.metric[rr.champion] <= np.min(O.combined_metric(rr.history[0]))
+    g, objs = portfolio.best_genotype(
+        PROB, "nsga2", rr.member_state(rr.champion), CFGS[rr.champion])
+    O.assert_valid(PROB, g)
+    assert np.isfinite(np.asarray(objs)).all()
+
+
+def test_reduced_portfolio_champion_genotype_legal():
+    cfgs = [nsga2.NSGA2Config(pop_size=8, reduced=True, perm_swap_prob=p)
+            for p in (0.4, 0.8)]
+    res = portfolio.run_portfolio(PROB, "nsga2", cfgs, key=KEY, n_gens=4)
+    g, _ = portfolio.best_genotype(
+        PROB, "nsga2", res.member_state(res.champion), cfgs[res.champion])
+    O.assert_valid(PROB, g)
+
+
+# --------------------------------------------------------------- service
+
+def test_service_finishes_jobs_legal_recompile_free():
+    svc = PlacementService(PROB, nsga2.NSGA2Config(pop_size=8),
+                           n_slots=3, gens_per_step=2)
+    specs = [dict(seed=i, budget=4 if i % 2 else 6,
+                  cfg=nsga2.NSGA2Config(pop_size=8,
+                                        real_mut_prob=0.05 + 0.05 * i))
+             for i in range(5)]
+    done = svc.run_jobs(specs)
+    assert len(done) == 5 and all(j.done for j in done)
+    for j in done:
+        assert j.gens == j.budget
+        assert np.isfinite(j.best_objs).all()
+        O.assert_valid(PROB, j.genotype)
+    # continuous batching: jobs came and went, ONE compiled step program
+    assert svc.step_compiles == 1
+    assert svc.stats()["useful_gens"] == sum(s["budget"] for s in specs)
+
+
+def test_service_backpressure_and_pool_isolation():
+    svc = PlacementService(PROB, nsga2.NSGA2Config(pop_size=8), n_slots=2,
+                           gens_per_step=2)
+    assert svc.submit(budget=4) is not None
+    assert svc.submit(budget=4) is not None
+    assert svc.submit(budget=4) is None          # pool full -> backpressure
+    # a config with different static fields cannot join this pool
+    with pytest.raises(ValueError):
+        svc.submit(cfg=nsga2.NSGA2Config(pop_size=16))
+    while svc.active.any():
+        svc.step()
+    assert svc.step_compiles == 1
+
+
+def test_service_jobs_reproducible_regardless_of_cotenants():
+    """A job's result is a pure function of (cfg, seed, budget,
+    gens_per_step): same spec alone or on a loaded pool, same answer."""
+    spec = dict(seed=42, budget=4,
+                cfg=nsga2.NSGA2Config(pop_size=8, real_mut_prob=0.2))
+    alone = PlacementService(PROB, nsga2.NSGA2Config(pop_size=8),
+                             n_slots=1, gens_per_step=2)
+    (job_a,) = [j for j in alone.run_jobs([spec]) if j.seed == 42]
+    crowded = PlacementService(PROB, nsga2.NSGA2Config(pop_size=8),
+                               n_slots=3, gens_per_step=2)
+    others = [dict(seed=7 + i, budget=6) for i in range(4)]
+    done = crowded.run_jobs(others[:2] + [spec] + others[2:])
+    (job_b,) = [j for j in done if j.seed == 42]
+    np.testing.assert_array_equal(job_a.best_objs, job_b.best_objs)
+
+
+def test_service_target_metric_finishes_early():
+    svc = PlacementService(PROB, nsga2.NSGA2Config(pop_size=8), n_slots=1,
+                           gens_per_step=2)
+    svc.submit(seed=0, budget=50, target=float("inf"))
+    done = svc.step()                            # any metric beats +inf
+    assert len(done) == 1 and done[0].gens == 2 < 50
+
+
+def test_service_cmaes_pool():
+    svc = PlacementService(PROB, cmaes.CMAESConfig(pop_size=8),
+                           algo="cmaes", n_slots=2, gens_per_step=3)
+    done = svc.run_jobs([dict(seed=i, budget=6) for i in range(3)])
+    assert len(done) == 3
+    for j in done:
+        O.assert_valid(PROB, j.genotype)
+    assert svc.step_compiles == 1

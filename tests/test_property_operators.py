@@ -1,0 +1,69 @@
+"""Property tests: variation operators keep genotypes in the legal space.
+
+Runs with hypothesis when installed, else the deterministic fallback
+sampler (`_hypothesis_compat`) -- either way these execute from a bare
+environment.  The load-bearing property is the paper's SS III-A.3 claim:
+*every* genotype the operators can produce decodes to a legal placement,
+so the search never needs a repair/legalisation pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import genotype as G
+from repro.core import nsga2, objectives as O
+from repro.fpga import device, netlist
+
+PROB = netlist.make_problem(device.get_device("xcvu_test"))
+
+
+def _is_perm(x, n: int) -> bool:
+    return np.array_equal(np.sort(np.asarray(x)), np.arange(n))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 80))
+def test_ox_always_returns_permutation(seed, n):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p1 = jax.random.permutation(k1, n).astype(jnp.int32)
+    p2 = jax.random.permutation(k2, n).astype(jnp.int32)
+    assert _is_perm(nsga2._ox(k3, p1, p2), n)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 80),
+       swaps=st.integers(1, 6))
+def test_swap_mut_always_returns_permutation(seed, n, swaps):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p = jax.random.permutation(k1, n).astype(jnp.int32)
+    assert _is_perm(nsga2._swap_mut(k2, p, swaps, 0.7), n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_genotypes_decode_legal(seed):
+    g = G.random_genotype(jax.random.PRNGKey(seed), PROB)
+    O.assert_valid(PROB, g)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_varied_children_decode_legal(seed):
+    """Children of random parents pass the independent placement checker."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g1 = G.random_genotype(k1, PROB)
+    g2 = G.random_genotype(k2, PROB)
+    child = nsga2._vary_one(k3, g1, g2, nsga2.NSGA2Config(pop_size=4))
+    O.assert_valid(PROB, child)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_reduced_children_decode_legal(seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p1 = tuple(G.random_genotype(k1, PROB)["perm"])
+    p2 = tuple(G.random_genotype(k2, PROB)["perm"])
+    child = nsga2._vary_one_reduced(
+        k3, p1, p2, nsga2.NSGA2Config(pop_size=4, reduced=True))
+    O.assert_valid(PROB, G.reduced_to_full(PROB, child))

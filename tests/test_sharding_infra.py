@@ -3,11 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_arch
 from repro.core import autoshard
 from repro.runtime import elastic
+from repro.runtime.jaxcompat import make_mesh
 from repro.sharding import costmodel as cm
 from repro.sharding import hloparse, logical
 
@@ -15,13 +16,11 @@ from repro.sharding import hloparse, logical
 # ------------------------------------------------------------ logical
 
 def _mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_divisibility_fallback():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     rules = logical.Rules((("heads", "model"),))
     # size-1 axis: sharding is a no-op, the resolver replicates instead
     spec = logical.spec_for(("heads",), (56,), mesh, rules)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.ckpt import checkpoint
 from repro.configs import get_reduced
@@ -33,10 +33,13 @@ def _trainer(tmp, steps=6, arch="yi-6b", inject=None, ckpt_every=2,
 
 
 def test_training_reduces_loss(tmp_path):
-    tr = _trainer(str(tmp_path), steps=30)
+    # the reduced model starts at ~ln(V) on the noisy 2-gram stream and
+    # needs ~50+ steps before the learning trend clears per-step noise
+    # (~0.02 nats); 100 steps gives a ~0.05-nat first/last margin
+    tr = _trainer(str(tmp_path), steps=100)
     hist = tr.run()
-    first = np.mean([h["loss"] for h in hist[:3]])
-    last = np.mean([h["loss"] for h in hist[-3:]])
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
     assert last < first, (first, last)
 
 
