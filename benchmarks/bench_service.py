@@ -1,8 +1,8 @@
-"""Placement service + portfolio throughput -> BENCH_placement.json.
+"""Placement service + portfolio + transfer + scheduler -> BENCH_placement.json.
 
-    PYTHONPATH=src python -m benchmarks.bench_service [--full] [--out PATH]
+    PYTHONPATH=src python -m benchmarks.bench_service [--smoke|--full] [--out P]
 
-First point on the serving-perf trajectory.  Two measurements:
+The serving-perf trajectory, one JSON per run.  Four measurements:
 
   * **service**: the continuous-batching placement engine runs >= 8
     concurrent jobs batched into one compiled step; reports jobs/sec,
@@ -13,13 +13,28 @@ First point on the serving-perf trajectory.  Two measurements:
     program (`core.portfolio.run_portfolio`); verifies the champion and
     every per-member best match equivalent independent `evolve.run` calls,
     and reports the batched-vs-sequential speedup (both post-compile).
+  * **transfer**: warm vs cold gens-to-target on a sibling-device pair
+    (paper Table II direction).  A champion converged on the base device
+    is migrated (`core.transfer`) and submitted via
+    `PlacementService.submit(init_state=...)`; both jobs chase the
+    migrated champion's own metric.  `warm_beats_cold` must stay true.
+  * **scheduler**: a heterogeneous job stream (mixed pop sizes, algorithms
+    and devices) served by `serve.scheduler.PlacementScheduler`; reports
+    jobs/sec, the pool count, and compiles-per-pool (each pool's batched
+    step must compile exactly once -- `all_single_compile`).
 
-JSON contract (consumed by future trend tooling -- keep keys stable):
-  bench, created_unix, device, jax_version, backend,
+JSON contract (consumed by `benchmarks.check_bench` and future trend
+tooling -- keys are append-only):
+  bench, created_unix, mode, device, jax_version, backend,
   service.{n_slots,n_jobs,pop_size,budget_gens,gens_per_step,wall_s,
            jobs_per_sec,gens_per_sec,evals_per_sec,step_compiles},
   portfolio.{n_configs,n_gens,pop_size,wall_s_batched,wall_s_independent,
-             speedup,champion_matches,members_match}
+             speedup,champion_matches,members_match},
+  transfer.{base_device,device,base_gens,base_pop,pop_size,budget_gens,
+            gens_per_step,target_metric,cold_gens,warm_gens,speedup,
+            warm_beats_cold},
+  scheduler.{n_jobs,n_pools,budget_gens,gens_per_step,n_slots,wall_s,
+             jobs_per_sec,all_single_compile,pools}
 """
 from __future__ import annotations
 
@@ -31,8 +46,10 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import evolve, nsga2, objectives as O, portfolio
+from repro.core import evolve, nsga2, cmaes, transfer, portfolio
+from repro.core import objectives as O
 from repro.serve.placement_service import PlacementService, make_job_specs
+from repro.serve.scheduler import PlacementScheduler
 
 
 def bench_service(prob, n_jobs: int, n_slots: int, pop: int, budget: int,
@@ -97,26 +114,124 @@ def bench_portfolio(prob, n_cfgs: int, pop: int, n_gens: int) -> dict:
     }
 
 
-def main(quick: bool = True, out: str = "BENCH_placement.json") -> dict:
-    dev = "xcvu_test" if quick else "xcvu11p"
+def bench_transfer(base_dev: str, dst_dev: str, base_pop: int,
+                   base_gens: int, pop: int, budget: int,
+                   gens_per_step: int) -> dict:
+    """Warm vs cold gens-to-target on a sibling pair (paper Table II).
+
+    Target = the migrated champion's own combined metric: the warm job
+    carries it from generation 0 (elitist seeding), the cold job has to
+    re-discover it from random init.
+    """
+    base_prob = common.problem(base_dev)
+    dst_prob = common.problem(dst_dev)
+    champ = transfer.converge_champion(base_prob, jax.random.PRNGKey(0),
+                                       base_pop, base_gens)
+    g_mig = transfer.migrate(base_prob, dst_prob, champ)
+    target = float(O.combined_metric(O.evaluate(dst_prob, g_mig)))
+
+    svc = PlacementService(dst_prob, nsga2.NSGA2Config(pop_size=pop),
+                           n_slots=2, gens_per_step=gens_per_step)
+    svc.submit(seed=0, budget=budget, target=target)
+    svc.submit(seed=0, budget=budget, target=target, init_state=g_mig)
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    cold = next(j for j in done if not j.warm)
+    warm = next(j for j in done if j.warm)
+    return {
+        "base_device": base_dev, "device": dst_dev,
+        "base_pop": base_pop, "base_gens": base_gens, "pop_size": pop,
+        "budget_gens": budget, "gens_per_step": gens_per_step,
+        "target_metric": target,
+        "cold_gens": cold.gens, "warm_gens": warm.gens,
+        "speedup": round(cold.gens / max(warm.gens, 1), 2),
+        "warm_beats_cold": bool(warm.gens < cold.gens),
+    }
+
+
+def bench_scheduler(devices, pops, jobs_per_pool: int, budget: int,
+                    n_slots: int, gens_per_step: int) -> dict:
+    """Heterogeneous stream: mixed pop sizes x algos x devices, one
+    process.  Pools compile lazily in a warmup wave; the timed wave then
+    measures steady-state fleet throughput."""
+    sch = PlacementScheduler(n_slots=n_slots, gens_per_step=gens_per_step)
+
+    def combos():
+        for dev in devices:
+            for p in pops:
+                yield dev, "nsga2", nsga2.NSGA2Config(pop_size=p)
+            yield dev, "cmaes", cmaes.CMAESConfig(pop_size=pops[0])
+
+    # warmup wave: every pool compiles its init + step once
+    for dev, algo, cfg in combos():
+        sch.submit(dev, cfg, algo=algo, seed=999, budget=gens_per_step)
+    sch.run_all()
+
+    n_jobs = 0
+    t0 = time.perf_counter()
+    for dev, algo, cfg in combos():
+        for s in range(jobs_per_pool):
+            sch.submit(dev, cfg, algo=algo, seed=s, budget=budget)
+            n_jobs += 1
+    done = sch.run_all()
+    wall = time.perf_counter() - t0
+    assert len(done) == n_jobs and all(j.done for j in done)
+    stats = sch.stats()
+    pools = {label: {"step_compiles": ps["step_compiles"],
+                     "useful_gens": ps["useful_gens"]}
+             for label, ps in stats["pools"].items()}
+    return {
+        "n_jobs": n_jobs, "n_pools": stats["n_pools"],
+        "budget_gens": budget, "gens_per_step": gens_per_step,
+        "n_slots": n_slots,
+        "wall_s": round(wall, 4),
+        "jobs_per_sec": round(n_jobs / wall, 3),
+        "all_single_compile": all(
+            p["step_compiles"] in (1, -1) for p in pools.values()),
+        "pools": pools,
+    }
+
+
+def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
+    """mode: smoke (CI PR gate) < quick (default) < full (paper-scale)."""
+    smoke, full = mode == "smoke", mode == "full"
+    dev = "xcvu11p" if full else "xcvu_test"
     prob = common.problem(dev)
     service = bench_service(
         prob,
-        n_jobs=16 if quick else 64,
-        n_slots=8, pop=16 if quick else 64,
-        budget=16 if quick else 96,        # multiples of gens_per_step
+        n_jobs=8 if smoke else (16 if not full else 64),
+        n_slots=8, pop=16 if not full else 64,
+        budget=8 if smoke else (16 if not full else 96),
         gens_per_step=8)
-    pf = bench_portfolio(prob, n_cfgs=4 if quick else 8,
-                         pop=16 if quick else 64,
-                         n_gens=16 if quick else 100)
+    pf = bench_portfolio(prob, n_cfgs=4 if not full else 8,
+                         pop=16 if not full else 64,
+                         n_gens=8 if smoke else (16 if not full else 100))
+    # base_gens does NOT shrink in smoke mode: the migrated champion must
+    # be converged for warm_beats_cold to be a meaningful (and stable)
+    # assertion -- an under-trained seed migrates worse than random init.
+    tr = bench_transfer(
+        base_dev="xcvu3p" if full else "xcvu_test",
+        dst_dev="xcvu5p" if full else "xcvu_test2",
+        base_pop=32, base_gens=120 if full else 100,
+        pop=16, budget=80 if full else (40 if smoke else 60),
+        gens_per_step=2)
+    sched = bench_scheduler(
+        devices=("xcvu3p", "xcvu5p") if full else ("xcvu_test",
+                                                   "xcvu_test2"),
+        pops=(8, 16), jobs_per_pool=2 if smoke else 4,
+        budget=8 if smoke else 16, n_slots=2, gens_per_step=4)
     report = {
         "bench": "placement_service",
         "created_unix": int(time.time()),
+        "mode": mode,
         "device": dev,
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "service": service,
         "portfolio": pf,
+        "transfer": tr,
+        "scheduler": sched,
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
@@ -128,7 +243,12 @@ def main(quick: bool = True, out: str = "BENCH_placement.json") -> dict:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest budgets (CI PR gate)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="BENCH_placement.json")
     args = ap.parse_args()
-    main(quick=not args.full, out=args.out)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
+    main(out=args.out,
+         mode="smoke" if args.smoke else ("full" if args.full else "quick"))

@@ -1,0 +1,134 @@
+"""Bench-regression gate for BENCH_placement.json (CI `bench-smoke` job).
+
+    python -m benchmarks.check_bench BENCH_placement.json [--baseline OLD]
+
+Hard failures (exit 1) -- correctness of the serving contracts:
+  * a required key is missing from any section (the JSON contract is
+    append-only; a vanished key means a silent contract break),
+  * `portfolio.champion_matches` / `portfolio.members_match` false
+    (batching changed answers),
+  * `transfer.warm_beats_cold` false (warm starts stopped helping),
+  * `scheduler.all_single_compile` false or a pool reporting more than
+    one step compile (continuous batching started recompiling),
+  * `service.step_compiles` not 1 (-1 = unknown counter is tolerated).
+
+Throughput deltas vs `--baseline` are WARN-ONLY: CI machines are noisy,
+so jobs/sec regressions are reported for humans, never enforced, and only
+compared when the workload shape matches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+REQUIRED: Dict[str, List[str]] = {
+    "service": ["n_slots", "n_jobs", "pop_size", "budget_gens",
+                "gens_per_step", "wall_s", "jobs_per_sec", "gens_per_sec",
+                "evals_per_sec", "step_compiles"],
+    "portfolio": ["n_configs", "n_gens", "pop_size", "wall_s_batched",
+                  "wall_s_independent", "speedup", "champion_matches",
+                  "members_match"],
+    "transfer": ["base_device", "device", "base_pop", "base_gens",
+                 "pop_size", "budget_gens", "gens_per_step",
+                 "target_metric", "cold_gens", "warm_gens", "speedup",
+                 "warm_beats_cold"],
+    "scheduler": ["n_jobs", "n_pools", "budget_gens", "gens_per_step",
+                  "n_slots", "wall_s", "jobs_per_sec",
+                  "all_single_compile", "pools"],
+}
+TOP_LEVEL = ["bench", "created_unix", "mode", "device", "jax_version",
+             "backend"]
+
+# (section, throughput key, shape keys that must match to compare)
+THROUGHPUT = [
+    ("service", "jobs_per_sec",
+     ["n_slots", "n_jobs", "pop_size", "budget_gens", "gens_per_step"]),
+    ("scheduler", "jobs_per_sec",
+     ["n_jobs", "n_pools", "budget_gens", "gens_per_step", "n_slots"]),
+]
+SLOWDOWN_WARN = 0.8        # warn when new < 80% of baseline
+
+
+def check(report: dict, baseline: dict = None) -> List[str]:
+    """Returns the list of hard errors; prints warnings as it goes."""
+    errors: List[str] = []
+    for key in TOP_LEVEL:
+        if key not in report:
+            errors.append(f"missing top-level key {key!r}")
+    for section, keys in REQUIRED.items():
+        sec = report.get(section)
+        if not isinstance(sec, dict):
+            errors.append(f"missing section {section!r}")
+            continue
+        for key in keys:
+            if key not in sec:
+                errors.append(f"missing key {section}.{key}")
+
+    pf = report.get("portfolio", {})
+    for key in ("champion_matches", "members_match"):
+        if pf.get(key) is False:
+            errors.append(f"portfolio.{key} is false: batched results "
+                          "diverged from independent runs")
+    tr = report.get("transfer", {})
+    if tr.get("warm_beats_cold") is False:
+        errors.append("transfer.warm_beats_cold is false: warm-started job "
+                      f"took {tr.get('warm_gens')} gens vs cold "
+                      f"{tr.get('cold_gens')}")
+    sc = report.get("scheduler", {})
+    if sc.get("all_single_compile") is False:
+        errors.append("scheduler.all_single_compile is false")
+    for label, pool in (sc.get("pools") or {}).items():
+        if pool.get("step_compiles") not in (1, -1):
+            errors.append(f"scheduler pool {label!r} compiled its step "
+                          f"{pool.get('step_compiles')} times (want 1)")
+    svc = report.get("service", {})
+    if svc.get("step_compiles") not in (1, -1, None):
+        errors.append(f"service.step_compiles == {svc['step_compiles']} "
+                      "(want 1)")
+
+    if baseline:
+        for section, key, shape in THROUGHPUT:
+            new, old = report.get(section, {}), baseline.get(section, {})
+            if not old or key not in new or key not in old:
+                continue
+            if any(new.get(s) != old.get(s) for s in shape):
+                print(f"note: {section} workload shape differs from "
+                      "baseline; skipping throughput comparison")
+                continue
+            if old[key] > 0 and new[key] < old[key] * SLOWDOWN_WARN:
+                print(f"WARNING: {section}.{key} regressed "
+                      f"{old[key]:.3f} -> {new[key]:.3f} "
+                      f"({100 * new[key] / old[key]:.0f}% of baseline; "
+                      "warn-only)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="fresh BENCH_placement.json to validate")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_placement.json for warn-only "
+                         "throughput comparison")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        report = json.load(f)
+    baseline = None
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"note: baseline unreadable ({e}); skipping comparison")
+    errors = check(report, baseline)
+    for err in errors:
+        print(f"FAIL: {err}")
+    if not errors:
+        print(f"ok: {args.report} satisfies the bench contract "
+              f"({len(REQUIRED)} sections)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,9 +6,8 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import genotype as G, objectives as O
+from repro.core import genotype as G
 from repro.fpga import device, netlist
 
 

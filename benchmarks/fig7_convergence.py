@@ -15,7 +15,6 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import annealing, cmaes, evolve, ga, nsga2
-from repro.core import objectives as O
 
 
 def run(quick: bool = True, seed: int = 0, dev: str = "xcvu11p"):

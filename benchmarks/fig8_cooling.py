@@ -12,7 +12,6 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import annealing
-from repro.core import objectives as O
 
 PARAM_SETS = {
     "exponential": [dict(t0=t0, alpha=a) for t0 in (1.0, 3.0)

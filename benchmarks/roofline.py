@@ -76,8 +76,8 @@ def nominate(rows: List[Dict]) -> None:
     print(f"#  most collective-bound:   {collb['arch']} x {collb['shape']} "
           f"({100*coll_share(collb):.1f}% of step)")
     if moe:
-        print(f"#  paper-representative:    deepseek-moe-16b x train_4k "
-              f"(expert placement == hard-block placement)")
+        print("#  paper-representative:    deepseek-moe-16b x train_4k "
+              "(expert placement == hard-block placement)")
 
 
 def main(dirname: str = "experiments/dryrun") -> None:

@@ -35,7 +35,8 @@ def main() -> None:
                             table2_transfer)
 
     benches = {
-        "placement_service": lambda: bench_service.main(quick=quick),
+        "placement_service": lambda: bench_service.main(
+            mode="quick" if quick else "full"),
         "table1_qor": lambda: table1.main(quick=quick),
         "fig7_convergence": lambda: fig7_convergence.main(quick=quick),
         "fig8_cooling": lambda: fig8_cooling.main(quick=quick),

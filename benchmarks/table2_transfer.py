@@ -13,9 +13,8 @@ from typing import Dict
 import jax
 import numpy as np
 
-from benchmarks import common
 from repro.core import evolve, nsga2, pipelining, transfer
-from repro.core import genotype as G, objectives as O
+from repro.core import objectives as O
 from repro.fpga import device, netlist
 
 

@@ -20,9 +20,8 @@ non-dominated sorting + crowding unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -15,7 +15,7 @@ changes.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -61,7 +61,10 @@ def step_impl(problem: Problem, cfg: GAConfig, state: Dict, key: jax.Array
         return jnp.where(fit[ia] <= fit[ib], ia, ib)
 
     pa, pb = tourney(k1), tourney(k2)
-    take = lambda idx: jax.tree.map(lambda a: a[idx], pop)
+
+    def take(idx):
+        return jax.tree.map(lambda a: a[idx], pop)
+
     children = jax.vmap(
         lambda k, g1, g2: N._vary_one(k, g1, g2, cfg.as_nsga2()))(
         jax.random.split(k3, p), take(pa), take(pb))

@@ -239,7 +239,10 @@ def step_impl(problem: Problem, cfg: NSGA2Config, state, key):
     k1, k2, k3 = jax.random.split(key, 3)
     pa = _tournament(k1, rank, crowd, p)
     pb = _tournament(k2, rank, crowd, p)
-    take = lambda idx: jax.tree.map(lambda a: a[idx], pop)
+
+    def take(idx):
+        return jax.tree.map(lambda a: a[idx], pop)
+
     vary = _vary_one_reduced if cfg.reduced else _vary_one
     children = jax.vmap(lambda k, g1, g2: vary(k, g1, g2, cfg))(
         jax.random.split(k3, p), take(pa), take(pb))

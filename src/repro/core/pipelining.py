@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import genotype as G

@@ -26,11 +26,37 @@ from repro.core import genotype as G
 from repro.fpga.netlist import Problem
 
 
+def _norm01(x: np.ndarray) -> np.ndarray:
+    """Column x coordinates -> relative positions in [0, 1].
+
+    Single-column geometries (and coincident columns, e.g. BRAM parity
+    sub-column pairs sharing one physical x) have zero spread; they take
+    the degenerate path explicitly -- every column sits at relative 0 --
+    instead of leaning on an epsilon denominator.
+    """
+    x = np.asarray(x, np.float64)
+    if x.size == 0:
+        raise ValueError("empty column set")
+    span = float(np.ptp(x))
+    if x.size == 1 or span <= 0.0:
+        return np.zeros_like(x)
+    return (x - x.min()) / span
+
+
 def _map_columns(src_x: np.ndarray, dst_x: np.ndarray) -> np.ndarray:
-    """For each dst column, the src column at the nearest relative x."""
-    sx = (src_x - src_x.min()) / max(np.ptp(src_x), 1e-9)
-    dx = (dst_x - dst_x.min()) / max(np.ptp(dst_x), 1e-9)
-    return np.argmin(np.abs(dx[:, None] - sx[None, :]), axis=1)
+    """For each dst column, the src column at the nearest relative x.
+
+    Distance ties (duplicate x values: BRAM parity sub-columns share one
+    physical column) break by relative *ordinal*, so identical column sets
+    map to the identity -- same-geometry transfer is exact.
+    """
+    sx = _norm01(src_x)
+    dx = _norm01(dst_x)
+    d = np.abs(dx[:, None] - sx[None, :])
+    so = np.arange(sx.size) / max(sx.size - 1, 1)
+    do = np.arange(dx.size) / max(dx.size - 1, 1)
+    d += np.abs(do[:, None] - so[None, :]) * 1e-6
+    return np.argmin(d, axis=1)
 
 
 def migrate(src: Problem, dst: Problem, g: G.Genotype) -> G.Genotype:
@@ -58,36 +84,42 @@ def migrate(src: Problem, dst: Problem, g: G.Genotype) -> G.Genotype:
     return {"dist": tuple(dist), "loc": tuple(loc), "perm": tuple(perm)}
 
 
+def converge_champion(problem: Problem, key: jax.Array, pop_size: int,
+                      n_gens: int) -> G.Genotype:
+    """Converge a base-device NSGA-II champion to seed transfers from.
+
+    One `evolve.run` + best-by-combined-metric extraction -- the shared
+    first step of every warm-start flow (bench, CLI demo, fleet example).
+    """
+    from repro.core import evolve
+    from repro.core import nsga2 as N
+    from repro.core import portfolio as P
+    cfg = N.NSGA2Config(pop_size=pop_size)
+    state, _ = evolve.run(problem, "nsga2", cfg, key, n_gens)
+    g, _objs = P.best_genotype(problem, "nsga2", state, cfg)
+    return g
+
+
 def seed_population(problem: Problem, g_seed: G.Genotype, key: jax.Array,
                     pop_size: int, jitter: float = 0.15) -> Dict:
-    """NSGA-II warm-start: seed + mutated copies (evaluated lazily by init)."""
-    from repro.core import nsga2 as N
-    from repro.core import objectives as O
-
-    def jit_one(k):
-        kk = jax.random.split(k, 7)
-        dist = tuple(g_seed["dist"][t]
-                     + jax.random.normal(kk[t], g_seed["dist"][t].shape)
-                     * jitter for t in G.TYPES)
-        loc = tuple(jnp.clip(
-            g_seed["loc"][t]
-            + jax.random.normal(kk[3 + t], g_seed["loc"][t].shape) * jitter,
-            0.0, 1.0) for t in G.TYPES)
-        perm = tuple(N._swap_mut(jax.random.fold_in(kk[6], t),
-                                 g_seed["perm"][t], 2, 0.5) for t in G.TYPES)
-        return {"dist": dist, "loc": loc, "perm": perm}
-
-    pop = jax.vmap(jit_one)(jax.random.split(key, pop_size))
-    # slot the unperturbed seed in at index 0
-    pop = jax.tree.map(lambda a, s: a.at[0].set(s), pop, g_seed)
-    objs = O.evaluate_population(problem, pop)
-    return {"pop": pop, "objs": objs}
+    """NSGA-II warm-start: seed + mutated copies (row 0 stays exact)."""
+    from repro.core import warmstart as W
+    from repro.core.nsga2 import NSGA2Config
+    pop, fresh = W.canonicalize(problem, g_seed, pop_size)
+    return W.warm_state(problem, "nsga2", NSGA2Config(pop_size=pop_size),
+                        jax.tree.map(jnp.asarray, pop), jnp.asarray(fresh),
+                        key, jnp.float32(jitter), jnp.float32(1.0))
 
 
 def seed_cmaes(problem: Problem, g_seed: G.Genotype, key: jax.Array,
                sigma0: float = 0.08):
     """CMA-ES warm-start state centred on the migrated genotype."""
     from repro.core import cmaes as C
-    mean0 = G.to_flat(problem, g_seed)
+    from repro.core import warmstart as W
     cfg = C.CMAESConfig(sigma0=sigma0)
-    return C.init_state(problem, key, cfg, mean0=mean0), cfg
+    pop, fresh = W.canonicalize(problem, g_seed, 1)
+    state = W.warm_state(problem, "cmaes", cfg,
+                         jax.tree.map(jnp.asarray, pop),
+                         jnp.asarray(fresh), key,
+                         jnp.float32(0.0), jnp.float32(1.0))
+    return state, cfg

@@ -1,0 +1,185 @@
+"""Warm-start state construction: seed any algorithm from a genotype.
+
+Transfer learning (paper SS IV-D, Table II) needs more than `migrate()`:
+the migrated champion has to become a *legal initial state* for whatever
+algorithm the serving pool runs, at the pool's static shapes.  This module
+owns that last mile:
+
+  * `canonicalize`  -- host-side shape normalisation.  A seed may be one
+    genotype, a stacked population of K genotypes, or a reduced
+    (mapping-only) tuple; it is padded (cyclic tiling) or truncated to the
+    pool's static row count so the jitted warm-init program compiles ONCE
+    per pool, like every other pool program.  Padded rows are flagged
+    `fresh` so the device-side jitter only perturbs copies, never given
+    members.
+  * `warm_state`    -- device-side (jit/vmap-safe) state builder:
+      - nsga2 / ga : population := seed rows + jittered copies (SBX-free
+        Gaussian jitter on the real tiers, swap mutations on the mapping
+        permutations; row 0 is always the unperturbed seed),
+      - cmaes      : mean := flat(seed), sigma := sigma0 * sigma_shrink
+        (the paper seeds CMA-ES "with a small sigma" so the search stays
+        near the transferred optimum),
+      - sa         : chain starts at flat(seed) with the seed's fitness.
+  * `member_warm_init` -- the pool-level entry point mirroring
+    `portfolio.member_init`: float hyperparameters ride as traced operands,
+    so one compiled warm-init serves every job config the pool admits.
+
+Jitter semantics: `jitter == 0` reproduces exact copies (real tiers
+unperturbed, no permutation swaps); the default 0.15 matches
+`transfer.seed_population`'s historical behaviour.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import genotype as G
+from repro.core import hyper
+from repro.core import objectives as O
+from repro.fpga.netlist import Problem
+
+# algorithms whose state carries a full population of genotypes
+POPULATION_ALGOS = ("nsga2", "ga")
+
+Seed = Union[G.Genotype, Tuple[jnp.ndarray, ...]]
+
+
+def seed_rows(algo: str, static_key: hyper.StaticKey) -> int:
+    """Rows of the canonical seed block for a pool: the static pop_size
+    for population algorithms, 1 (the champion) for point algorithms."""
+    if algo in POPULATION_ALGOS:
+        return dict(static_key[1])["pop_size"]
+    return 1
+
+
+def canonicalize(problem: Problem, init: Seed, n_rows: int
+                 ) -> Tuple[G.Genotype, np.ndarray]:
+    """Normalise a user-supplied seed to (stacked genotype [n_rows], fresh).
+
+    `init` may be a single genotype, a stacked population (leading axis on
+    every leaf), or a reduced mapping-only tuple of permutations (lifted
+    via `G.reduced_to_full`).  Stacked populations are ordered best-first
+    by combined metric (one host-side evaluation), so truncation to
+    `n_rows` keeps the champions and row 0 is always the best member;
+    smaller populations tile cyclically, with the tiled copies marked
+    `fresh` for device-side jitter.
+    """
+    if isinstance(init, (tuple, list)):
+        init = G.reduced_to_full(problem, tuple(init))
+    if not isinstance(init, dict) or set(init) != {"dist", "loc", "perm"}:
+        raise TypeError(
+            "init_state must be a genotype dict (dist/loc/perm), a stacked "
+            f"population of them, or a reduced perm tuple; got {type(init)}")
+    leaves = [np.asarray(a) for a in jax.tree.leaves(init)]
+    base_ndim = 1  # every genotype leaf is 1-D (per-type vectors)
+    stacked = all(a.ndim == base_ndim + 1 for a in leaves)
+    single = all(a.ndim == base_ndim for a in leaves)
+    if not (stacked or single):
+        raise ValueError("seed leaves must all be rank-1 (one genotype) or "
+                         "all rank-2 (stacked population)")
+    if single:
+        pop = jax.tree.map(
+            lambda a: np.broadcast_to(np.asarray(a), (n_rows,)
+                                      + np.asarray(a).shape).copy(), init)
+        fresh = np.arange(n_rows) >= 1
+        return pop, fresh
+    k = leaves[0].shape[0]
+    if any(np.asarray(a).shape[0] != k for a in leaves):
+        raise ValueError("stacked seed leaves disagree on population size")
+    metric = np.asarray(O.combined_metric(
+        O.evaluate_population(problem, jax.tree.map(jnp.asarray, init))))
+    order = np.argsort(metric, kind="stable")
+    idx = order[np.arange(n_rows) % k]
+    pop = jax.tree.map(lambda a: np.asarray(a)[idx], init)
+    fresh = np.arange(n_rows) >= k
+    return pop, fresh
+
+
+def jitter_genotype(problem: Problem, key: jax.Array, g: G.Genotype,
+                    jitter: jnp.ndarray) -> G.Genotype:
+    """One perturbed copy of `g` (jit-safe; `jitter` may be traced).
+
+    Real tiers get Gaussian noise of scale `jitter`; mapping permutations
+    get 2 swap mutations with probability scaled so the default
+    jitter=0.15 swaps at 0.5 (and jitter=0 never swaps).
+    """
+    from repro.core import nsga2 as N
+    kk = jax.random.split(key, 7)
+    swap_prob = jnp.clip(jitter * (0.5 / 0.15), 0.0, 1.0)
+    dist = tuple(g["dist"][t]
+                 + jax.random.normal(kk[t], g["dist"][t].shape) * jitter
+                 for t in range(3))
+    loc = tuple(jnp.clip(
+        g["loc"][t]
+        + jax.random.normal(kk[3 + t], g["loc"][t].shape) * jitter,
+        0.0, 1.0) for t in range(3))
+    perm = tuple(N._swap_mut(jax.random.fold_in(kk[6], t),
+                             g["perm"][t], 2, swap_prob) for t in range(3))
+    return {"dist": dist, "loc": loc, "perm": perm}
+
+
+def _jitter_rows(problem: Problem, key: jax.Array, pop: G.Genotype,
+                 fresh: jnp.ndarray, jitter: jnp.ndarray) -> G.Genotype:
+    """Perturb exactly the `fresh` rows of a stacked genotype block."""
+    n = fresh.shape[0]
+    keys = jax.random.split(key, n)
+    jittered = jax.vmap(
+        lambda k, g: jitter_genotype(problem, k, g, jitter))(keys, pop)
+
+    def pick(a, b):
+        m = fresh.reshape((n,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, b, a)
+
+    return jax.tree.map(pick, pop, jittered)
+
+
+def warm_state(problem: Problem, algo: str, cfg, pop: G.Genotype,
+               fresh: jnp.ndarray, key: jax.Array,
+               jitter: jnp.ndarray, sigma_shrink: jnp.ndarray) -> Dict:
+    """Algorithm state seeded from a canonical stacked genotype block.
+
+    `pop`/`fresh` come from `canonicalize`; row 0 is the unperturbed
+    champion.  Float config fields may be traced (pool hyperparameters).
+    """
+    if algo in POPULATION_ALGOS:
+        pop = _jitter_rows(problem, key, pop, fresh, jitter)
+        if getattr(cfg, "reduced", False):
+            perms = pop["perm"]
+            from repro.core import nsga2 as N
+            return {"pop": perms, "objs": N._eval_reduced(problem, perms)}
+        return {"pop": pop, "objs": O.evaluate_population(problem, pop)}
+
+    champ = jax.tree.map(lambda a: a[0], pop)
+    z = G.to_flat(problem, champ)
+    objs = O.evaluate(problem, champ)
+    if algo == "cmaes":
+        from repro.core import cmaes as C
+        state = C.init_state(problem, key, cfg, mean0=z)
+        state["sigma"] = jnp.asarray(cfg.sigma0, jnp.float32) * sigma_shrink
+        state["best_objs"] = objs
+        state["best_z"] = z
+        return state
+    if algo == "sa":
+        return {"z": z, "fit": O.scalarize(objs), "objs": objs,
+                "k": jnp.int32(0),
+                "t_adapt": jnp.asarray(cfg.t0, jnp.float32),
+                "acc_ema": jnp.float32(0.5),
+                "best_z": z, "best_objs": objs}
+    raise KeyError(f"warm start not implemented for algo {algo!r}")
+
+
+def member_warm_init(problem: Problem, algo: str,
+                     static_key: hyper.StaticKey,
+                     traced: Dict[str, jnp.ndarray], pop: G.Genotype,
+                     fresh: jnp.ndarray, jitter: jnp.ndarray,
+                     sigma_shrink: jnp.ndarray, key: jax.Array) -> Dict:
+    """Pool-level warm init mirroring `portfolio.member_init`: static
+    (problem, algo, static_key) bake into the compiled program, float
+    hyperparameters + the seed block ride as traced operands -- one
+    compile per pool regardless of how many warm jobs arrive."""
+    cfg = hyper.tracify(hyper.merge_config(static_key, traced))
+    return warm_state(problem, algo, cfg, pop, fresh, key, jitter,
+                      sigma_shrink)

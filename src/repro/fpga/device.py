@@ -183,10 +183,16 @@ _SPECS = {
                     n_uram_cols=5, n_dsp_cols=32, n_bram_cols=14, seed=113),
 }
 
-# small synthetic part for tests / quickstart: 6 conv units
+# small synthetic parts for tests / quickstart: 6 conv units.  The second
+# is a geometry *sibling* of the first (same column counts and capacities,
+# different seeded column layout) -- the cheap analogue of a VU3P->VU5P
+# transfer pair for warm-start tests and the CI bench smoke.
 _SPECS["xcvu_test"] = dict(family="T", n_slr=1, rects_per_slr=1,
                            units_per_rect=6, n_uram_cols=2, n_dsp_cols=4,
                            n_bram_cols=2, seed=7)
+_SPECS["xcvu_test2"] = dict(family="T", n_slr=1, rects_per_slr=1,
+                            units_per_rect=6, n_uram_cols=2, n_dsp_cols=4,
+                            n_bram_cols=2, seed=8)
 
 
 def get_device(name: str) -> DeviceModel:

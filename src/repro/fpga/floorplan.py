@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import genotype as G
 from repro.fpga.device import ROWS_PER_CR, TYPE_NAMES
-from repro.fpga.netlist import BLOCKS_PER_UNIT, Problem
+from repro.fpga.netlist import Problem
 
 _GLYPH = {0: "U", 1: "D", 2: "B"}
 

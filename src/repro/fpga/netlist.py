@@ -67,7 +67,10 @@ def build_nets(n_units: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
     bits: List[int] = []
 
     def add(s: int, d: int, ww: float, bb: int) -> None:
-        src.append(s); dst.append(d); w.append(ww); bits.append(bb)
+        src.append(s)
+        dst.append(d)
+        w.append(ww)
+        bits.append(bb)
 
     for k in range(n_units):
         u0 = _unit_gid(k, 0, 0)

@@ -47,7 +47,10 @@ def maxbbox_pallas(ux: jnp.ndarray, uy: jnp.ndarray,
     bb = -b % 8
     pu = -u % BU
     pp = -p % BP
-    pad = lambda a: jnp.pad(a, ((0, pp), (0, bb), (0, pu)), mode="edge")
+
+    def pad(a):
+        return jnp.pad(a, ((0, pp), (0, bb), (0, pu)), mode="edge")
+
     ux, uy = pad(ux), pad(uy)
     grid = ((p + pp) // BP, (u + pu) // BU)
     spec = pl.BlockSpec((BP, b + bb, BU), lambda i, j: (i, 0, j))

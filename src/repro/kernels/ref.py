@@ -7,7 +7,7 @@ so the whole framework runs identically -- just without the VMEM tiling.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

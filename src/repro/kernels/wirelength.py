@@ -43,7 +43,10 @@ def wirelength2_pallas(x1: jnp.ndarray, y1: jnp.ndarray, x2: jnp.ndarray,
     p, n = x1.shape
     pp = -p % BP
     pn = -n % BN
-    pad = lambda a: jnp.pad(a, ((0, pp), (0, pn)))
+
+    def pad(a):
+        return jnp.pad(a, ((0, pp), (0, pn)))
+
     x1, y1, x2, y2 = pad(x1), pad(y1), pad(x2), pad(y2)
     w = pad(w)                       # zero weight => padded nets contribute 0
     grid = ((p + pp) // BP, (n + pn) // BN)

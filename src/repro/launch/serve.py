@@ -3,10 +3,16 @@
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --dry-run
     PYTHONPATH=src python -m repro.launch.serve --placement --device xcvu_test
+    PYTHONPATH=src python -m repro.launch.serve --placement \
+        --device xcvu_test2 --warm-from xcvu_test
 
 `--placement` runs the batched placement-as-a-service engine
 (`serve.placement_service`): a fixed slot pool continuously batches many
 concurrent placement jobs for one FPGA device into a single jitted step.
+`--warm-from BASE` first converges a champion on the BASE device, migrates
+it onto `--device` (`core.transfer`), and submits every job transfer-seeded
+(`submit(init_state=...)`); jobs then race the migrated champion's metric
+warm vs cold to show the Table II speedup direction live.
 """
 import argparse
 import os
@@ -25,12 +31,40 @@ def placement_main(args) -> None:
     svc = PlacementService(prob, base, n_slots=args.slots,
                            gens_per_step=args.gens_per_step)
     specs = make_job_specs(args.requests, args.pop, args.gens)
+
+    if args.warm_from:
+        import jax
+        import numpy as np
+
+        from repro.core import transfer
+        from repro.core import objectives as O
+
+        base_prob = netlist.make_problem(device.get_device(args.warm_from))
+        print(f"converging champion on {args.warm_from} "
+              f"({args.warm_gens} gens)...")
+        champ = transfer.converge_champion(base_prob, jax.random.PRNGKey(0),
+                                           2 * args.pop, args.warm_gens)
+        g_mig = transfer.migrate(base_prob, prob, champ)
+        target = float(O.combined_metric(O.evaluate(prob, g_mig)))
+        print(f"migrated champion metric on {args.device}: {target:.3e}; "
+              "racing warm vs cold to that target")
+        # every spec twice: cold and warm-seeded, chasing the same target
+        specs = [dict(s, target=target) for s in specs] + \
+                [dict(s, target=target, init_state=g_mig) for s in specs]
+
     t0 = time.perf_counter()
     done = svc.run_jobs(specs)
     dt = time.perf_counter() - t0
     for j in sorted(done, key=lambda j: j.jid):
-        print(f"job{j.jid}: {j.gens} gens  wl2={j.best_objs[0]:.3e}  "
+        tag = " warm" if j.warm else ""
+        print(f"job{j.jid}{tag}: {j.gens} gens  wl2={j.best_objs[0]:.3e}  "
               f"bbox={j.best_objs[1]:.0f}  metric={j.metric:.3e}")
+    if args.warm_from:
+        cold = [j.gens for j in done if not j.warm]
+        warm = [j.gens for j in done if j.warm]
+        print(f"gens to target: cold mean {np.mean(cold):.1f}, "
+              f"warm mean {np.mean(warm):.1f} "
+              f"({np.mean(cold) / max(np.mean(warm), 1e-9):.1f}x fewer)")
     s = svc.stats()
     print(f"{len(done)} jobs in {dt:.2f}s "
           f"({len(done)/dt:.2f} jobs/s, {s['useful_gens']/dt:.1f} gens/s) "
@@ -55,6 +89,11 @@ def main():
     ap.add_argument("--gens", type=int, default=64,
                     help="generation budget per placement job")
     ap.add_argument("--gens-per-step", type=int, default=4)
+    ap.add_argument("--warm-from", default=None, metavar="DEVICE",
+                    help="transfer-seed jobs from a champion converged on "
+                         "this base device (e.g. xcvu_test)")
+    ap.add_argument("--warm-gens", type=int, default=100,
+                    help="generations to converge the base champion")
     args = ap.parse_args()
 
     if args.placement:

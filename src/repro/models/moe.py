@@ -22,7 +22,7 @@ optimizes -- experts are the closest analogue of the paper's hard blocks
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

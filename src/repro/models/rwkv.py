@@ -135,8 +135,11 @@ def time_mix(tm, a: RWKVArgs, x: jnp.ndarray,
     # boundary WKV states for the backward pass (a 4k-step single scan
     # would otherwise stash a [B,H,dh,dh] state per *token*)
     ch = _chunk_size(s)
-    seq_first = lambda t: jnp.moveaxis(t, 1, 0).reshape(
-        (s // ch, ch) + t.shape[0:1] + t.shape[2:])         # [n,ch,B,H,dh]
+
+    def seq_first(t):                                       # [n,ch,B,H,dh]
+        return jnp.moveaxis(t, 1, 0).reshape(
+            (s // ch, ch) + t.shape[0:1] + t.shape[2:])
+
     xs = (seq_first(rf), seq_first(kf), seq_first(vf), seq_first(w))
 
     @jax.checkpoint

@@ -9,7 +9,7 @@ loss, which is exactly how the real models consume their frontends.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

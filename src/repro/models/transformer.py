@@ -15,7 +15,6 @@ Exposes the three lowering entry points of the framework:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

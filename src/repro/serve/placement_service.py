@@ -27,7 +27,13 @@ is masked out of accounting and their results are never read.
 
 Static config fields (pop_size, perm_swaps, reduced, ...) are fixed per
 pool at construction: they are baked into the compiled step.  Jobs whose
-config disagrees on those belong in a different pool.
+config disagrees on those belong in a different pool --
+`serve.scheduler.PlacementScheduler` routes mixed traffic across pools.
+
+Warm starts: `submit(init_state=...)` seeds a job from a genotype (e.g.
+`core.transfer.migrate`'s projection of a sibling-device champion) via a
+per-pool jitted warm-init program (`core.warmstart`) -- the transfer
+serving path of paper SS IV-D.
 """
 from __future__ import annotations
 
@@ -39,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hyper, portfolio
+from repro.core import hyper, portfolio, warmstart
 from repro.core import objectives as O
 from repro.fpga.netlist import Problem
 
@@ -69,6 +75,7 @@ class PlacementJob:
     target: Optional[float]        # finish early if combined metric <= this
     slot: int = -1
     gens: int = 0                  # generations run so far
+    warm: bool = False             # seeded via submit(init_state=...)
     done: bool = False
     best_objs: Optional[np.ndarray] = None   # [2] = (wl^2, max bbox)
     metric: float = float("inf")             # combined metric of best_objs
@@ -106,6 +113,12 @@ class PlacementService:
         # so the host ships two small int arrays, not key material.
         self._init_fn = jax.jit(functools.partial(
             portfolio.member_init, problem, algo, self.static_key))
+        # warm-start init: the seed block rides as a traced operand at the
+        # pool's canonical shape (`warmstart.seed_rows`), so transfer-seeded
+        # jobs share ONE compiled warm-init regardless of their hyperparams
+        self._seed_rows = warmstart.seed_rows(algo, self.static_key)
+        self._warm_init_fn = jax.jit(functools.partial(
+            warmstart.member_warm_init, problem, algo, self.static_key))
 
         def _step(traced, states, seeds, gens):
             def one(tr, st, s, g):
@@ -127,12 +140,25 @@ class PlacementService:
     # ------------------------------------------------------------- admit
 
     def submit(self, cfg=None, seed: Optional[int] = None, budget: int = 64,
-               target: Optional[float] = None) -> Optional[int]:
+               target: Optional[float] = None, init_state=None,
+               jitter: float = 0.15,
+               sigma_shrink: float = 0.25) -> Optional[int]:
         """Admit one job; returns its jid, or None if the pool is full.
 
         Budgets are quantized UP to the pool's `gens_per_step` granularity
         (the batched step advances whole steps only); `job.budget` records
         the quantized value, which the job then runs exactly.
+
+        `init_state` warm-starts the job from a seed genotype (or stacked
+        population / reduced perm tuple) on *this* pool's problem --
+        typically `transfer.migrate(base, target, champion)`.  The seed is
+        padded/truncated to the pool's static shape on the host and turned
+        into an algorithm state by one per-pool jitted warm-init program
+        (`core.warmstart`): NSGA-II/GA populations keep the seed at row 0
+        and fill the rest with `jitter`-scaled copies, CMA-ES starts its
+        mean at the seed with `sigma0 * sigma_shrink`, SA starts its chain
+        there.  Warm jobs stay reproducible: the result is a pure function
+        of (config, seed, budget, init_state, jitter, sigma_shrink).
         """
         cfg = self.base_cfg if cfg is None else cfg
         budget = -(-budget // self.gens_per_step) * self.gens_per_step
@@ -148,11 +174,18 @@ class PlacementService:
         slot = int(free[0])
         seed = self.next_jid if seed is None else seed
         job = PlacementJob(self.next_jid, cfg, seed, budget, target,
-                           slot=slot)
+                           slot=slot, warm=init_state is not None)
         self.next_jid += 1
-        state1 = self._init_fn(
-            {k: jnp.float32(v) for k, v in traced.items()},
-            jax.random.PRNGKey(seed))
+        traced_dev = {k: jnp.float32(v) for k, v in traced.items()}
+        if init_state is None:
+            state1 = self._init_fn(traced_dev, jax.random.PRNGKey(seed))
+        else:
+            pop, fresh = warmstart.canonicalize(
+                self.problem, init_state, self._seed_rows)
+            state1 = self._warm_init_fn(
+                traced_dev, jax.tree.map(jnp.asarray, pop),
+                jnp.asarray(fresh), jnp.float32(jitter),
+                jnp.float32(sigma_shrink), jax.random.PRNGKey(seed))
         # splice the single job state into the pool at `slot`
         self.states = jax.tree.map(
             lambda pool, one: pool.at[slot].set(one), self.states, state1)

@@ -1,0 +1,177 @@
+"""Multi-pool placement scheduler: heterogeneous jobs, one process.
+
+`PlacementService` pools are deliberately rigid: static config fields
+(pop_size, perm_swaps, reduced, schedule, ...), the algorithm, and the
+device problem are baked into each pool's compiled programs, which is what
+keeps its batched step recompile-free.  The scheduler is the layer above
+that restores flexibility without giving that up:
+
+  * jobs are routed by *pool signature* -- (device, algo, static config
+    fields, gens_per_step) -- and a `PlacementService` pool is created
+    lazily the first time a signature appears,
+  * pools step round-robin (one pool's batched step per `step()` call), so
+    a process can race NSGA-II vs CMA-ES vs SA across pop sizes and
+    devices with fair interleaving on one accelerator,
+  * jobs that find their pool full wait in a per-pool FIFO and admit as
+    slots free up (the pool's own backpressure, made non-blocking).
+
+Each pool still compiles its step exactly once; per-job results remain
+pure functions of (config, seed, budget, init_state) -- identical to
+running the same job on a standalone service -- because pools never share
+PRNG streams and slot state is per-job (see `placement_service`).
+
+Warm starts compose: `submit(init_state=...)` forwards the seed genotype
+to the routed pool, so a single migrated champion can fan out across every
+device pool in the fleet (see `examples/placement_fleet.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import hyper
+from repro.fpga.netlist import Problem
+from repro.serve.placement_service import PlacementJob, PlacementService
+
+PoolKey = Tuple[str, str, hyper.StaticKey, int]
+
+
+@dataclasses.dataclass
+class FleetJob:
+    """A scheduler-level job: routing info + the pool job once finished."""
+    jid: int                       # scheduler-global id
+    device: str
+    algo: str
+    pool_key: PoolKey
+    spec: Dict[str, Any]           # PlacementService.submit kwargs
+    pool_jid: Optional[int] = None  # set at admission
+    result: Optional[PlacementJob] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None and self.result.done
+
+
+class PlacementScheduler:
+    """Routes placement jobs across lazily created per-signature pools."""
+
+    def __init__(self, problems: Optional[Dict[str, Problem]] = None,
+                 n_slots: int = 4, gens_per_step: int = 4, seed: int = 0):
+        self.n_slots, self.gens_per_step = n_slots, gens_per_step
+        self.seed = seed
+        self._problems: Dict[str, Problem] = dict(problems or {})
+        self._pools: Dict[PoolKey, PlacementService] = {}
+        self._pending: Dict[PoolKey, List[FleetJob]] = {}
+        self._inflight: Dict[Tuple[PoolKey, int], FleetJob] = {}
+        self._rotation: List[PoolKey] = []     # round-robin order
+        self._next_pool = 0
+        self.next_jid = 0
+        self.jobs: Dict[int, FleetJob] = {}
+
+    # ------------------------------------------------------------ routing
+
+    def problem(self, device_name: str) -> Problem:
+        """The (cached) placement problem for a device name."""
+        if device_name not in self._problems:
+            from repro.fpga import device, netlist
+            self._problems[device_name] = netlist.make_problem(
+                device.get_device(device_name))
+        return self._problems[device_name]
+
+    def pool_key(self, device_name: str, algo: str, cfg,
+                 gens_per_step: Optional[int] = None) -> PoolKey:
+        static_key, _ = hyper.split_config(cfg)
+        return (device_name, algo, static_key,
+                gens_per_step or self.gens_per_step)
+
+    def _pool(self, key: PoolKey, cfg) -> PlacementService:
+        if key not in self._pools:
+            device_name, algo, _static, gps = key
+            self._pools[key] = PlacementService(
+                self.problem(device_name), cfg, algo=algo,
+                n_slots=self.n_slots, gens_per_step=gps,
+                seed=self.seed)
+            self._pending[key] = []
+            self._rotation.append(key)
+        return self._pools[key]
+
+    # ------------------------------------------------------------- admit
+
+    def submit(self, device: str, cfg, algo: str = "nsga2",
+               gens_per_step: Optional[int] = None, **spec) -> int:
+        """Enqueue one job; returns its scheduler-global jid.
+
+        `spec` is forwarded to `PlacementService.submit` (seed, budget,
+        target, init_state, jitter, sigma_shrink).  Unlike a raw pool,
+        this never rejects: a full pool queues the job FIFO and admits it
+        when a slot frees.
+        """
+        key = self.pool_key(device, algo, cfg, gens_per_step)
+        self._pool(key, cfg)                   # create lazily
+        job = FleetJob(self.next_jid, device, algo, key,
+                       spec=dict(spec, cfg=cfg))
+        self.next_jid += 1
+        self.jobs[job.jid] = job
+        self._pending[key].append(job)
+        self._admit(key)
+        return job.jid
+
+    def _admit(self, key: PoolKey) -> None:
+        pool, queue = self._pools[key], self._pending[key]
+        while queue:
+            pool_jid = pool.submit(**queue[0].spec)
+            if pool_jid is None:               # pool full
+                break
+            job = queue.pop(0)
+            job.pool_jid = pool_jid
+            self._inflight[(key, pool_jid)] = job
+
+    # -------------------------------------------------------------- step
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._inflight) or any(self._pending.values())
+
+    def step(self) -> List[FleetJob]:
+        """Admit what fits everywhere, then advance ONE pool (round-robin)
+        by its batched step; returns newly finished fleet jobs."""
+        for key in self._rotation:
+            self._admit(key)
+        finished: List[FleetJob] = []
+        for _ in range(len(self._rotation)):
+            key = self._rotation[self._next_pool % len(self._rotation)]
+            self._next_pool += 1
+            pool = self._pools[key]
+            if not pool.active.any():
+                continue
+            for pj in pool.step():
+                job = self._inflight.pop((key, pj.jid))
+                job.result = pj
+                finished.append(job)
+            self._admit(key)                   # freed slots refill now
+            break
+        return finished
+
+    def run_all(self) -> List[FleetJob]:
+        """Step until every submitted job finishes (admission order may
+        interleave pools; per-job results don't depend on it)."""
+        done: List[FleetJob] = []
+        while self.busy:
+            done.extend(self.step())
+        return done
+
+    # -------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, Any]:
+        pools = {}
+        for key in self._rotation:
+            device_name, algo, static_key, gps = key
+            label = f"{device_name}/{algo}/" + ",".join(
+                f"{k}={v}" for k, v in static_key[1]) + f"/gps={gps}"
+            pools[label] = self._pools[key].stats()
+        return {
+            "n_pools": len(self._pools),
+            "jobs_submitted": self.next_jid,
+            "jobs_done": sum(j.done for j in self.jobs.values()),
+            "pools": pools,
+        }

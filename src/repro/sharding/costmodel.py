@@ -25,7 +25,7 @@ the compiled dry-run's cost_analysis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 

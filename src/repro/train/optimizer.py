@@ -9,7 +9,7 @@ the bf16 working copy is re-derived each step (standard mixed precision).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +53,10 @@ def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
 def init(params: Any, compress: bool = False) -> Dict[str, Any]:
     # copy=True: with fp32 params, astype would alias the same buffer and
     # break donating params and opt state to the same jitted step
-    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+
+    def f32(p):
+        return jnp.array(p, dtype=jnp.float32, copy=True)
+
     state = {
         "master": jax.tree.map(f32, params),
         "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),

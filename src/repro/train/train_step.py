@@ -8,8 +8,7 @@ for steps -- one of the hillclimb levers in EXPERIMENTS.md SSPerf.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import annealing, cmaes, evolve, ga, nsga2, objectives as O
-from repro.core import genotype as G
 from repro.fpga import device, netlist
 
 PROB = netlist.make_problem(device.get_device("xcvu_test"))

@@ -5,7 +5,6 @@ definitional implementations on randomized objective sets, including
 heavy ties (quantized objectives) and exactly duplicated points -- the
 cases where scatter/segment tricks in the vectorized versions can slip.
 """
-import jax
 import numpy as np
 import pytest
 

@@ -163,7 +163,8 @@ def test_hloparse_trip_count_scaling():
 
 
 def test_hloparse_shape_bytes():
-    tot = lambda s: sum(b for _, b, _ in hloparse._shape_list(s))
+    def tot(s):
+        return sum(b for _, b, _ in hloparse._shape_list(s))
     assert tot("bf16[4,8]") == 64
     assert tot("(f32[2,2], s32[3])") == 28
     assert tot("pred[]") == 1

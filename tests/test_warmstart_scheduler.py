@@ -1,0 +1,277 @@
+"""Warm starts + multi-pool scheduler: transfer must pay, routing must not
+recompile, and neither may change answers.
+
+Covers the PR's acceptance contracts:
+  * `PlacementService.submit(init_state=migrate(base, target, champ))`
+    reaches a fixed fitness target in strictly fewer generations than a
+    cold start on a sibling device,
+  * the scheduler serves a mixed pop_size/algo/device job stream with
+    exactly one step compile per distinct pool,
+  * per-job results match independent standalone-service runs, and warm
+    jobs are reproducible functions of (config, seed, init_state),
+  * `core.warmstart` seeds every algorithm family correctly (row-0 seed
+    preservation, population padding/truncation, CMA-ES sigma shrink),
+  * `transfer.migrate` same-geometry identity + single-column geometries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmaes, evolve, nsga2, transfer, warmstart
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga import device, netlist
+from repro.serve.placement_service import PlacementService
+from repro.serve.scheduler import PlacementScheduler
+
+KEY = jax.random.PRNGKey(0)
+BASE = netlist.make_problem(device.get_device("xcvu_test"))
+SIB = netlist.make_problem(device.get_device("xcvu_test2"))
+
+
+@pytest.fixture(scope="module")
+def migrated_champion():
+    """A converged xcvu_test champion migrated onto the xcvu_test2 sibling
+    (shared across tests -- the base run dominates this module's cost)."""
+    st, _ = evolve.run(BASE, "nsga2", nsga2.NSGA2Config(pop_size=32),
+                       KEY, 100)
+    i = int(np.argmin(np.asarray(O.combined_metric(st["objs"]))))
+    champ = jax.tree.map(lambda a: a[i], st["pop"])
+    g_mig = transfer.migrate(BASE, SIB, champ)
+    O.assert_valid(SIB, g_mig)
+    return g_mig
+
+
+# ------------------------------------------------------- transfer.migrate
+
+def test_same_geometry_identity_transfer():
+    """migrate(p, p, g) == g on every tier -- including the BRAM parity
+    sub-columns whose duplicate x coordinates used to break ties wrong."""
+    for prob in (BASE, netlist.make_problem(device.get_device("xcvu3p"))):
+        g = G.random_genotype(KEY, prob)
+        gm = transfer.migrate(prob, prob, g)
+        for tier in ("dist", "loc", "perm"):
+            for t in range(3):
+                np.testing.assert_array_equal(np.asarray(gm[tier][t]),
+                                              np.asarray(g[tier][t]))
+
+
+def test_single_column_geometry_migrates():
+    """n_cols == 1 takes the explicit degenerate path (no epsilon-divide):
+    migration to and from a single-URAM-column device stays legal."""
+    dev1 = device._make_device("one_col", "T", 1, 1, 6, 1, 4, 2, seed=11)
+    p1 = netlist.make_problem(dev1)
+    g = G.random_genotype(KEY, BASE)
+    gm = transfer.migrate(BASE, p1, g)
+    O.assert_valid(p1, gm)
+    back = transfer.migrate(p1, BASE, G.random_genotype(KEY, p1))
+    O.assert_valid(BASE, back)
+    np.testing.assert_array_equal(
+        transfer._map_columns(np.array([5.0]), np.array([1.0, 2.0, 3.0])),
+        np.zeros(3, np.int64))
+
+
+# ----------------------------------------------------------- core.warmstart
+
+def test_warm_state_population_row0_is_seed():
+    g = G.random_genotype(KEY, SIB)
+    pop, fresh = warmstart.canonicalize(SIB, g, 8)
+    assert not fresh[0] and fresh[1:].all()
+    st = warmstart.warm_state(SIB, "nsga2", nsga2.NSGA2Config(pop_size=8),
+                              jax.tree.map(jnp.asarray, pop),
+                              jnp.asarray(fresh), KEY,
+                              jnp.float32(0.15), jnp.float32(0.25))
+    for t in range(3):
+        np.testing.assert_array_equal(np.asarray(st["pop"]["perm"][t][0]),
+                                      np.asarray(g["perm"][t]))
+    assert st["objs"].shape == (8, 2)
+    # every jittered member must still decode legally
+    for i in range(8):
+        O.assert_valid(SIB, jax.tree.map(lambda a: a[i], st["pop"]))
+
+
+def test_canonicalize_pads_and_truncates_populations():
+    pop3 = jax.vmap(lambda k: G.random_genotype(k, SIB))(
+        jax.random.split(KEY, 3))
+    metric = np.asarray(O.combined_metric(
+        O.evaluate_population(SIB, pop3)))
+    order = np.argsort(metric, kind="stable")
+    padded, fresh = warmstart.canonicalize(SIB, pop3, 8)
+    assert fresh.tolist() == [False] * 3 + [True] * 5
+    for t in range(3):
+        got = np.asarray(padded["perm"][t])
+        ref = np.asarray(pop3["perm"][t])[order]          # best-first
+        np.testing.assert_array_equal(got[:3], ref)
+        np.testing.assert_array_equal(got[3:6], ref)      # cyclic tiling
+    # truncation keeps the champions, not the first rows
+    trunc, fresh = warmstart.canonicalize(SIB, pop3, 2)
+    assert not fresh.any()
+    for t in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(trunc["perm"][t]),
+            np.asarray(pop3["perm"][t])[order[:2]])
+    row0 = jax.tree.map(lambda a: jnp.asarray(a[0]), trunc)
+    np.testing.assert_allclose(
+        float(O.combined_metric(O.evaluate(SIB, row0))), metric.min(),
+        rtol=1e-6)
+
+
+def test_warm_state_cmaes_sigma_shrink_and_seed_mean():
+    g = G.random_genotype(KEY, SIB)
+    cfg = cmaes.CMAESConfig(pop_size=8, sigma0=0.3)
+    pop, fresh = warmstart.canonicalize(SIB, g, 1)
+    st = warmstart.warm_state(SIB, "cmaes", cfg,
+                              jax.tree.map(jnp.asarray, pop),
+                              jnp.asarray(fresh), KEY,
+                              jnp.float32(0.0), jnp.float32(0.25))
+    np.testing.assert_allclose(float(st["sigma"]), 0.3 * 0.25, rtol=1e-6)
+    g2 = G.from_flat(SIB, st["mean"])
+    for t in range(3):
+        np.testing.assert_array_equal(np.asarray(g2["perm"][t]),
+                                      np.asarray(g["perm"][t]))
+    # warm best is the seed itself, not +inf
+    np.testing.assert_allclose(np.asarray(st["best_objs"]),
+                               np.asarray(O.evaluate(SIB, g)), rtol=1e-6)
+
+
+def test_warm_state_zero_jitter_gives_exact_copies():
+    g = G.random_genotype(KEY, SIB)
+    pop, fresh = warmstart.canonicalize(SIB, g, 4)
+    st = warmstart.warm_state(SIB, "nsga2", nsga2.NSGA2Config(pop_size=4),
+                              jax.tree.map(jnp.asarray, pop),
+                              jnp.asarray(fresh), KEY,
+                              jnp.float32(0.0), jnp.float32(1.0))
+    for t in range(3):
+        ref = np.asarray(g["perm"][t])
+        for i in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(st["pop"]["perm"][t][i]), ref)
+
+
+# ------------------------------------------------- warm service contracts
+
+def test_warm_start_beats_cold_to_target(migrated_champion):
+    """The acceptance criterion: a transfer-seeded job reaches the
+    migrated champion's metric in strictly fewer generations than a cold
+    start on the sibling device (paper Table II direction)."""
+    target = float(O.combined_metric(O.evaluate(SIB, migrated_champion)))
+    svc = PlacementService(SIB, nsga2.NSGA2Config(pop_size=16),
+                           n_slots=2, gens_per_step=2)
+    svc.submit(seed=0, budget=60, target=target)
+    svc.submit(seed=0, budget=60, target=target,
+               init_state=migrated_champion)
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    cold = next(j for j in done if not j.warm)
+    warm = next(j for j in done if j.warm)
+    assert warm.metric <= target
+    assert warm.gens < cold.gens, (
+        f"warm {warm.gens} gens !< cold {cold.gens} gens")
+    assert svc.step_compiles == 1
+    O.assert_valid(SIB, warm.genotype)
+
+
+def test_warm_jobs_reproducible_and_cotenant_independent(migrated_champion):
+    """A warm job's result is a pure function of (cfg, seed, budget,
+    init_state): same spec alone or on a loaded pool, same answer."""
+    spec = dict(seed=11, budget=6, init_state=migrated_champion,
+                cfg=nsga2.NSGA2Config(pop_size=8, real_mut_prob=0.2))
+    alone = PlacementService(SIB, nsga2.NSGA2Config(pop_size=8),
+                             n_slots=1, gens_per_step=2)
+    (job_a,) = alone.run_jobs([spec])
+    crowded = PlacementService(SIB, nsga2.NSGA2Config(pop_size=8),
+                               n_slots=3, gens_per_step=2)
+    others = [dict(seed=7 + i, budget=8) for i in range(3)]
+    done = crowded.run_jobs(others[:1] + [spec] + others[1:])
+    (job_b,) = [j for j in done if j.seed == 11]
+    np.testing.assert_array_equal(job_a.best_objs, job_b.best_objs)
+    assert job_a.warm and job_b.warm
+
+
+def test_warm_start_cmaes_pool(migrated_champion):
+    svc = PlacementService(SIB, cmaes.CMAESConfig(pop_size=8),
+                           algo="cmaes", n_slots=1, gens_per_step=2)
+    seed_metric = float(O.combined_metric(
+        O.evaluate(SIB, migrated_champion)))
+    svc.submit(seed=0, budget=6, init_state=migrated_champion,
+               sigma_shrink=0.25)
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    # warm CMA-ES never loses the seed: best-so-far starts there
+    assert done[0].metric <= seed_metric * (1 + 1e-6)
+    O.assert_valid(SIB, done[0].genotype)
+
+
+def test_warm_start_reduced_pool_accepts_full_and_reduced_seed():
+    g = G.random_genotype(KEY, SIB)
+    svc = PlacementService(SIB, nsga2.NSGA2Config(pop_size=8, reduced=True),
+                           n_slots=2, gens_per_step=2)
+    svc.submit(seed=0, budget=4, init_state=g)              # full genotype
+    svc.submit(seed=1, budget=4, init_state=tuple(g["perm"]))  # perm tuple
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    assert len(done) == 2
+    for j in done:
+        O.assert_valid(SIB, j.genotype)
+    assert svc.step_compiles == 1
+
+
+# ------------------------------------------------------------- scheduler
+
+def test_scheduler_routes_mixed_jobs_one_compile_per_pool():
+    sch = PlacementScheduler(n_slots=2, gens_per_step=2)
+    n = 0
+    for dev in ("xcvu_test", "xcvu_test2"):
+        for pop in (8, 16):
+            for s in range(3):                # 3 jobs > 2 slots: queueing
+                sch.submit(dev, nsga2.NSGA2Config(pop_size=pop),
+                           seed=s, budget=4)
+                n += 1
+    sch.submit("xcvu_test2", cmaes.CMAESConfig(pop_size=8), algo="cmaes",
+               seed=0, budget=4)
+    n += 1
+    done = sch.run_all()
+    assert len(done) == n and all(j.done for j in done)
+    stats = sch.stats()
+    # 2 devices x 2 pop sizes + 1 cmaes = 5 distinct static signatures
+    assert stats["n_pools"] == 5
+    for label, s in stats["pools"].items():
+        assert s["step_compiles"] in (1, -1), label
+    for job in done:
+        O.assert_valid(sch.problem(job.device), job.result.genotype)
+
+
+def test_scheduler_results_match_standalone_service():
+    """Routing through the multi-pool layer must not change any job's
+    answer: same (cfg, seed, budget, gens_per_step) -> same objectives."""
+    spec = dict(seed=5, budget=6,
+                cfg=nsga2.NSGA2Config(pop_size=8, sbx_eta=7.0))
+    ref_svc = PlacementService(SIB, spec["cfg"], n_slots=1,
+                               gens_per_step=2)
+    (ref,) = ref_svc.run_jobs([spec])
+
+    sch = PlacementScheduler(n_slots=2, gens_per_step=2)
+    jid = sch.submit("xcvu_test2", spec["cfg"], seed=5, budget=6)
+    # co-tenant noise in other pools and the same pool
+    sch.submit("xcvu_test2", spec["cfg"], seed=9, budget=4)
+    sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=16), seed=1,
+               budget=4)
+    done = {j.jid: j for j in sch.run_all()}
+    np.testing.assert_array_equal(done[jid].result.best_objs,
+                                  ref.best_objs)
+
+
+def test_scheduler_queues_beyond_slots_and_finishes():
+    sch = PlacementScheduler(n_slots=1, gens_per_step=2)
+    jids = [sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=8),
+                       seed=i, budget=4) for i in range(4)]
+    assert sch.busy
+    done = sch.run_all()
+    assert sorted(j.jid for j in done) == jids
+    assert not sch.busy
+    (label,) = sch.stats()["pools"]
+    assert sch.stats()["pools"][label]["step_compiles"] in (1, -1)
