@@ -22,6 +22,22 @@ The serving-perf trajectory, one JSON per run.  Four measurements:
     and devices) served by `serve.scheduler.PlacementScheduler`; reports
     jobs/sec, the pool count, and compiles-per-pool (each pool's batched
     step must compile exactly once -- `all_single_compile`).
+  * **cache**: the champion store (`serve.champion_store`) end to end on
+    the sibling pair: a cold run populates the store, an exact-signature
+    resubmission is served in O(ms) with ZERO generations and no slot
+    (`cache_hit_exact_correct` must stay true), and a sibling-device job
+    is warm-started by signature discovery, reaching the migrated
+    champion's metric in <= 1/4 the cold generations
+    (`sibling_within_quarter`).
+  * **policy**: completion-order contract of the stepping policies: an
+    urgent (tight-deadline) job submitted after bulk work finishes FIRST
+    under `deadline` and does NOT under `round_robin`
+    (`policy_deadline_meets_order` must stay true); the `priority` rank
+    is reported alongside.
+  * **autoscale**: a 1-slot pool absorbing a burst grows along the
+    geometric slot ladder; compiles stay bounded by the number of ladder
+    sizes (`compiles_within_ladder`) and every job's objectives match a
+    standalone never-grown service (`jobs_match_standalone`).
 
 JSON contract (consumed by `benchmarks.check_bench` and future trend
 tooling -- keys are append-only):
@@ -34,7 +50,15 @@ tooling -- keys are append-only):
             gens_per_step,target_metric,cold_gens,warm_gens,speedup,
             warm_beats_cold},
   scheduler.{n_jobs,n_pools,budget_gens,gens_per_step,n_slots,wall_s,
-             jobs_per_sec,all_single_compile,pools}
+             jobs_per_sec,all_single_compile,pools},
+  cache.{base_device,device,pop_size,budget_gens,gens_per_step,cold_gens,
+         exact_hit_gens,exact_hit_wall_ms,sibling_warm_gens,
+         sibling_speedup,sibling_within_quarter,cache_hit_exact_correct},
+  policy.{device,budget_gens,gens_per_step,n_bulk,rr_urgent_rank,
+          edf_urgent_rank,priority_urgent_rank,policy_deadline_meets_order},
+  autoscale.{n_jobs,n_slots_initial,max_slots,pop_size,sizes,
+             step_compiles,budget_gens,gens_per_step,wall_s,jobs_per_sec,
+             compiles_within_ladder,jobs_match_standalone}
 """
 from __future__ import annotations
 
@@ -48,6 +72,7 @@ import numpy as np
 from benchmarks import common
 from repro.core import evolve, nsga2, cmaes, transfer, portfolio
 from repro.core import objectives as O
+from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementService, make_job_specs
 from repro.serve.scheduler import PlacementScheduler
 
@@ -193,6 +218,136 @@ def bench_scheduler(devices, pops, jobs_per_pool: int, budget: int,
     }
 
 
+def bench_cache(base_dev: str, sib_dev: str, pop: int, budget: int,
+                gens_per_step: int) -> dict:
+    """Champion store end to end: cold run -> exact hit -> sibling warm.
+
+    The exact hit must serve with zero generations and no pool (O(ms));
+    the sibling warm start must reach the migrated champion's metric in
+    <= 1/4 of the cold gens-to-target (paper Table II direction, now
+    decided inside the serving layer by content signatures).
+    """
+    store = ChampionStore()
+    sch = PlacementScheduler(n_slots=2, gens_per_step=gens_per_step,
+                             store=store)
+    cfg = nsga2.NSGA2Config(pop_size=pop)
+    jid_cold = sch.submit(base_dev, cfg, seed=0, budget=budget)
+    done = {j.jid: j for j in sch.run_all()}
+    champion_metric = done[jid_cold].result.metric
+
+    # exact hit: same signature, reachable target -> instant finished job
+    pools_before = sch.stats()["n_pools"]
+    target = champion_metric * 1.001
+    t0 = time.perf_counter()
+    jid_hit = sch.submit(base_dev, cfg, seed=1, budget=budget,
+                         target=target)
+    done_hit = {j.jid: j for j in sch.run_all()}
+    wall_hit = time.perf_counter() - t0
+    hit = done_hit[jid_hit]
+    cache_hit_exact_correct = bool(
+        hit.cached and hit.result.gens == 0
+        and hit.result.metric <= target
+        and sch.stats()["n_pools"] == pools_before)
+
+    # sibling warm hit vs a cold control, both chasing the migrated
+    # champion's own metric (the store discovers the donor by sibling_key)
+    sib_prob = sch.problem(sib_dev)
+    entry, kind = store.lookup(sib_prob)
+    assert kind == "sibling", kind
+    g_mig = store.seed_for(sib_prob, entry)
+    sib_target = float(O.combined_metric(O.evaluate(sib_prob, g_mig)))
+    cold_sch = PlacementScheduler(n_slots=2, gens_per_step=gens_per_step)
+    jid = cold_sch.submit(sib_dev, cfg, seed=0, budget=budget,
+                          target=sib_target)
+    cold_gens = {j.jid: j for j in cold_sch.run_all()}[jid].result.gens
+    jid = sch.submit(sib_dev, cfg, seed=0, budget=budget,
+                     target=sib_target)
+    warm_job = {j.jid: j for j in sch.run_all()}[jid]
+    assert warm_job.warm_from_cache
+    warm_gens = warm_job.result.gens
+    return {
+        "base_device": base_dev, "device": sib_dev, "pop_size": pop,
+        "budget_gens": budget, "gens_per_step": gens_per_step,
+        "cold_gens": cold_gens,
+        "exact_hit_gens": hit.result.gens,
+        "exact_hit_wall_ms": round(wall_hit * 1e3, 3),
+        "sibling_warm_gens": warm_gens,
+        "sibling_speedup": round(cold_gens / max(warm_gens, 1), 2),
+        "sibling_within_quarter": bool(4 * warm_gens <= cold_gens),
+        "cache_hit_exact_correct": cache_hit_exact_correct,
+    }
+
+
+def bench_policy(dev: str, budget: int, gens_per_step: int,
+                 n_bulk: int = 2) -> dict:
+    """Completion-order contract: an urgent job submitted AFTER bulk work
+    finishes first under `deadline` (EDF) and not under `round_robin`."""
+    bulk_cfg = nsga2.NSGA2Config(pop_size=16)
+    urgent_cfg = nsga2.NSGA2Config(pop_size=8)
+
+    def urgent_rank(policy) -> int:
+        sch = PlacementScheduler(n_slots=1, gens_per_step=gens_per_step,
+                                 policy=policy)
+        for s in range(n_bulk):
+            sch.submit(dev, bulk_cfg, seed=s, budget=budget, deadline=1e9,
+                       priority=0.0)
+        urgent = sch.submit(dev, urgent_cfg, seed=0, budget=budget,
+                            deadline=1.0, priority=10.0)
+        order = [j.jid for j in sch.run_all()]
+        return order.index(urgent)
+
+    rr = urgent_rank("round_robin")
+    edf = urgent_rank("deadline")
+    prio = urgent_rank("priority")
+    return {
+        "device": dev, "budget_gens": budget,
+        "gens_per_step": gens_per_step, "n_bulk": n_bulk,
+        "rr_urgent_rank": rr, "edf_urgent_rank": edf,
+        "priority_urgent_rank": prio,
+        "policy_deadline_meets_order": bool(edf == 0 and rr > 0),
+    }
+
+
+def bench_autoscale(dev: str, n_jobs: int, pop: int, budget: int,
+                    gens_per_step: int, max_slots: int = 4) -> dict:
+    """Queue-depth autoscaling: a 1-slot pool absorbs a burst by growing
+    along the geometric slot ladder.  Compiles stay O(#sizes) and every
+    job's result must match a standalone never-grown service."""
+    prob = common.problem(dev)
+    cfg = nsga2.NSGA2Config(pop_size=pop)
+    sch = PlacementScheduler(n_slots=1, gens_per_step=gens_per_step,
+                             autoscale=True, autoscale_threshold=2,
+                             max_slots=max_slots)
+    t0 = time.perf_counter()
+    jids = [sch.submit(dev, cfg, seed=i, budget=budget)
+            for i in range(n_jobs)]
+    done = {j.jid: j for j in sch.run_all()}
+    wall = time.perf_counter() - t0
+    assert sorted(done) == jids
+    (pool_stats,) = sch.stats()["pools"].values()
+    sizes = pool_stats["sizes"]
+    compiles = pool_stats["step_compiles"]
+
+    ref = PlacementService(prob, cfg, n_slots=1,
+                           gens_per_step=gens_per_step)
+    ref_objs = {j.seed: j.best_objs for j in ref.run_jobs(
+        [dict(seed=i, budget=budget) for i in range(n_jobs)])}
+    jobs_match = all(
+        np.allclose(done[j].result.best_objs,
+                    ref_objs[done[j].result.seed], rtol=1e-5)
+        for j in jids)
+    return {
+        "n_jobs": n_jobs, "n_slots_initial": 1, "max_slots": max_slots,
+        "pop_size": pop, "sizes": sizes, "step_compiles": compiles,
+        "budget_gens": budget, "gens_per_step": gens_per_step,
+        "wall_s": round(wall, 4),
+        "jobs_per_sec": round(n_jobs / wall, 3),
+        "compiles_within_ladder": bool(compiles == -1
+                                       or compiles <= len(sizes)),
+        "jobs_match_standalone": bool(jobs_match),
+    }
+
+
 def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
     """mode: smoke (CI PR gate) < quick (default) < full (paper-scale)."""
     smoke, full = mode == "smoke", mode == "full"
@@ -221,6 +376,18 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
                                                    "xcvu_test2"),
         pops=(8, 16), jobs_per_pool=2 if smoke else 4,
         budget=8 if smoke else 16, n_slots=2, gens_per_step=4)
+    # cache budgets mirror `transfer` (same sibling-pair race, now driven
+    # by the store): the cold leg must genuinely converge toward the
+    # migrated champion for the 1/4-gens sibling assertion to be stable
+    cache = bench_cache(
+        base_dev="xcvu3p" if full else "xcvu_test",
+        sib_dev="xcvu5p" if full else "xcvu_test2",
+        pop=16, budget=80 if full else (40 if smoke else 60),
+        gens_per_step=2)
+    pol = bench_policy(dev, budget=8 if smoke else 16, gens_per_step=4)
+    autoscale = bench_autoscale(
+        dev, n_jobs=6 if not full else 12, pop=16 if not full else 64,
+        budget=8 if smoke else 16, gens_per_step=4)
     report = {
         "bench": "placement_service",
         "created_unix": int(time.time()),
@@ -232,6 +399,9 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
         "portfolio": pf,
         "transfer": tr,
         "scheduler": sched,
+        "cache": cache,
+        "policy": pol,
+        "autoscale": autoscale,
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

@@ -10,11 +10,21 @@ Hard failures (exit 1) -- correctness of the serving contracts:
   * `transfer.warm_beats_cold` false (warm starts stopped helping),
   * `scheduler.all_single_compile` false or a pool reporting more than
     one step compile (continuous batching started recompiling),
-  * `service.step_compiles` not 1 (-1 = unknown counter is tolerated).
+  * `service.step_compiles` not 1 (-1 = unknown counter is tolerated),
+  * `cache.cache_hit_exact_correct` false (an exact-signature champion
+    stopped serving instantly / correctly),
+  * `cache.sibling_within_quarter` false (signature-discovered warm
+    starts stopped paying the Table II dividend),
+  * `policy.policy_deadline_meets_order` false (EDF stopped putting the
+    urgent job first, or round-robin started to),
+  * `autoscale.compiles_within_ladder` / `autoscale.jobs_match_standalone`
+    false (growing a pool recompiled per job or changed answers).
 
 Throughput deltas vs `--baseline` are WARN-ONLY: CI machines are noisy,
 so jobs/sec regressions are reported for humans, never enforced, and only
-compared when the workload shape matches.
+compared when the workload shape matches.  A baseline that predates a
+newly added throughput key is tolerated with a warning, never a crash --
+the contract is append-only, so old baselines are always a key subset.
 """
 from __future__ import annotations
 
@@ -37,9 +47,40 @@ REQUIRED: Dict[str, List[str]] = {
     "scheduler": ["n_jobs", "n_pools", "budget_gens", "gens_per_step",
                   "n_slots", "wall_s", "jobs_per_sec",
                   "all_single_compile", "pools"],
+    "cache": ["base_device", "device", "pop_size", "budget_gens",
+              "gens_per_step", "cold_gens", "exact_hit_gens",
+              "exact_hit_wall_ms", "sibling_warm_gens", "sibling_speedup",
+              "sibling_within_quarter", "cache_hit_exact_correct"],
+    "policy": ["device", "budget_gens", "gens_per_step", "n_bulk",
+               "rr_urgent_rank", "edf_urgent_rank", "priority_urgent_rank",
+               "policy_deadline_meets_order"],
+    "autoscale": ["n_jobs", "n_slots_initial", "max_slots", "pop_size",
+                  "sizes", "step_compiles", "budget_gens", "gens_per_step",
+                  "wall_s", "jobs_per_sec", "compiles_within_ladder",
+                  "jobs_match_standalone"],
 }
 TOP_LEVEL = ["bench", "created_unix", "mode", "device", "jax_version",
              "backend"]
+
+# (section, boolean key, message when false) -- hard correctness gates
+BOOLEANS = [
+    ("portfolio", "champion_matches",
+     "batched results diverged from independent runs"),
+    ("portfolio", "members_match",
+     "batched results diverged from independent runs"),
+    ("transfer", "warm_beats_cold", "warm starts stopped helping"),
+    ("cache", "cache_hit_exact_correct",
+     "exact-signature cache hit stopped serving instantly/correctly"),
+    ("cache", "sibling_within_quarter",
+     "sibling warm start no longer reaches target in <= 1/4 cold gens"),
+    ("policy", "policy_deadline_meets_order",
+     "deadline policy no longer finishes the urgent job first "
+     "(or round_robin started to)"),
+    ("autoscale", "compiles_within_ladder",
+     "autoscaled pool compiled more than once per ladder size"),
+    ("autoscale", "jobs_match_standalone",
+     "autoscaled pool changed per-job results vs a standalone service"),
+]
 
 # (section, throughput key, shape keys that must match to compare)
 THROUGHPUT = [
@@ -47,6 +88,9 @@ THROUGHPUT = [
      ["n_slots", "n_jobs", "pop_size", "budget_gens", "gens_per_step"]),
     ("scheduler", "jobs_per_sec",
      ["n_jobs", "n_pools", "budget_gens", "gens_per_step", "n_slots"]),
+    ("autoscale", "jobs_per_sec",
+     ["n_jobs", "n_slots_initial", "max_slots", "pop_size", "budget_gens",
+      "gens_per_step"]),
 ]
 SLOWDOWN_WARN = 0.8        # warn when new < 80% of baseline
 
@@ -66,16 +110,9 @@ def check(report: dict, baseline: dict = None) -> List[str]:
             if key not in sec:
                 errors.append(f"missing key {section}.{key}")
 
-    pf = report.get("portfolio", {})
-    for key in ("champion_matches", "members_match"):
-        if pf.get(key) is False:
-            errors.append(f"portfolio.{key} is false: batched results "
-                          "diverged from independent runs")
-    tr = report.get("transfer", {})
-    if tr.get("warm_beats_cold") is False:
-        errors.append("transfer.warm_beats_cold is false: warm-started job "
-                      f"took {tr.get('warm_gens')} gens vs cold "
-                      f"{tr.get('cold_gens')}")
+    for section, key, why in BOOLEANS:
+        if report.get(section, {}).get(key) is False:
+            errors.append(f"{section}.{key} is false: {why}")
     sc = report.get("scheduler", {})
     if sc.get("all_single_compile") is False:
         errors.append("scheduler.all_single_compile is false")
@@ -91,7 +128,14 @@ def check(report: dict, baseline: dict = None) -> List[str]:
     if baseline:
         for section, key, shape in THROUGHPUT:
             new, old = report.get(section, {}), baseline.get(section, {})
-            if not old or key not in new or key not in old:
+            if key not in new:
+                continue
+            if not old or key not in old:
+                # append-only contract: a baseline captured before this
+                # throughput key existed is stale, not broken
+                print(f"WARNING: baseline lacks {section}.{key} "
+                      "(predates this key?); skipping comparison -- "
+                      "regenerate benchmarks/BENCH_smoke_baseline.json")
                 continue
             if any(new.get(s) != old.get(s) for s in shape):
                 print(f"note: {section} workload shape differs from "

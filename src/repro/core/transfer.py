@@ -84,6 +84,20 @@ def migrate(src: Problem, dst: Problem, g: G.Genotype) -> G.Genotype:
     return {"dist": tuple(dist), "loc": tuple(loc), "perm": tuple(perm)}
 
 
+def auto_migrate(src: Problem, dst: Problem, g: G.Genotype) -> G.Genotype:
+    """Signature-routed transfer: the projection the *problems* call for.
+
+    Same content signature -> the genotype is already a placement of the
+    target (identity, no projection work); anything else -> `migrate`.
+    This is the entry the champion store uses, so "same problem vs sibling
+    problem" is decided by content hashes, never by the caller comparing
+    device names.
+    """
+    if src.signature == dst.signature:
+        return g
+    return migrate(src, dst, g)
+
+
 def converge_champion(problem: Problem, key: jax.Array, pop_size: int,
                       n_gens: int) -> G.Genotype:
     """Converge a base-device NSGA-II champion to seed transfers from.

@@ -25,6 +25,7 @@ match Table II (123/246/246/369/480/640 conv units for VU3P..VU13P).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -44,6 +45,28 @@ CHAIN_LEN = {URAM: 2, DSP: 9, BRAM: 4}
 CHAINS_PER_UNIT = {URAM: 1, DSP: 2, BRAM: 2}
 # cascade site step inside a chain (Eq. 5): +1 for DSP/URAM, +2 for RAMB18
 SITE_STEP = {URAM: 1, DSP: 1, BRAM: 2}
+
+
+def content_hash(*parts) -> str:
+    """Stable short hex digest of a mixed array/scalar content tuple.
+
+    Arrays hash by dtype + shape + raw bytes (C-contiguous), scalars by
+    repr; the digest is independent of object identity and process, which
+    is what makes it usable as a cross-process cache key (champion store,
+    persisted JSON).  16 hex chars = 64 bits -- collision-safe for any
+    realistic device/problem population.
+    """
+    h = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, np.ndarray):
+            a = np.ascontiguousarray(p)
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        else:
+            h.update(repr(p).encode())
+        h.update(b"|")
+    return h.hexdigest()[:16]
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -78,6 +101,44 @@ class DeviceModel:
     @property
     def n_rects(self) -> int:
         return self.rects_per_slr * self.n_slr
+
+    @property
+    def signature(self) -> str:
+        """Content hash of the full geometry (column x positions included).
+
+        Two devices share a signature iff a placement found on one is a
+        placement on the other -- the exact-match key of the champion
+        store.  Name-independent: a renamed spec with identical geometry
+        hashes the same.  Cached on first use (the model is frozen).
+        """
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            parts = [self.n_slr, self.rects_per_slr, self.units_per_rect,
+                     self.rect_rows]
+            for t in (URAM, DSP, BRAM):
+                c = self.columns[t]
+                parts += [c.x, c.cap_sites, c.parity]
+            sig = content_hash(*parts)
+            object.__setattr__(self, "_signature", sig)
+        return sig
+
+    @property
+    def sibling_key(self) -> str:
+        """Content hash of the *structural* geometry only (column counts,
+        capacities, parities, chain demands -- NOT x positions or
+        replication factors).  Devices sharing a sibling key present the
+        same search space shape, so a champion migrates between them at
+        high fidelity (`core.transfer.migrate`) -- the Table II pairs, and
+        the sibling-match key of the champion store."""
+        sig = self.__dict__.get("_sibling_key")
+        if sig is None:
+            parts = [self.units_per_rect]
+            for t in (URAM, DSP, BRAM):
+                c = self.columns[t]
+                parts += [c.x.shape[0], c.cap_sites, c.parity]
+            sig = content_hash(*parts)
+            object.__setattr__(self, "_sibling_key", sig)
+        return sig
 
     def chain_capacity(self, t: int) -> int:
         L = CHAIN_LEN[t]

@@ -33,7 +33,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.fpga.device import (BRAM, CHAIN_LEN, CHAINS_PER_UNIT, DSP,
-                               ROW_PITCH, SITE_STEP, URAM, DeviceModel)
+                               ROW_PITCH, SITE_STEP, URAM, DeviceModel,
+                               content_hash)
 
 # roles inside one conv unit, in logical-gid order
 # (u0,u1 | dA0..dA8 | dB0..dB8 | bA0..bA3 | bB0..bB3)  -> 28 blocks
@@ -147,6 +148,44 @@ class Problem:
     @property
     def n_nets(self) -> int:
         return int(self.net_src.shape[0])
+
+    @property
+    def signature(self) -> str:
+        """Content hash of (geometry x netlist): the exact identity of this
+        placement problem.  Equal signatures mean a genotype is directly
+        reusable (identity transfer); the champion store's primary key.
+        Cached on first use -- problems are frozen.
+        """
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            parts = [self.n_units, self.n_rects]
+            for g in self.geom:
+                parts += [g.col_x, g.col_cap_chains, g.col_parity,
+                          g.chain_len, g.site_step, g.row_pitch, g.n_chains]
+            parts += [self.net_src, self.net_dst, self.net_w, self.net_bits]
+            sig = content_hash(*parts)
+            object.__setattr__(self, "_signature", sig)
+        return sig
+
+    @property
+    def sibling_key(self) -> str:
+        """Content hash of the structural shape only: column counts,
+        capacities, parities, chain demands and the netlist -- NOT column x
+        positions or the chip replication factor.  Problems sharing a
+        sibling key have the same genotype sizes and netlist, so a
+        champion projects between them at high fidelity
+        (`core.transfer.migrate`) -- how the champion store discovers
+        warm-start donors across devices."""
+        sig = self.__dict__.get("_sibling_key")
+        if sig is None:
+            parts = [self.n_units]
+            for g in self.geom:
+                parts += [g.col_x.shape[0], g.col_cap_chains, g.col_parity,
+                          g.chain_len, g.site_step, g.row_pitch, g.n_chains]
+            parts += [self.net_src, self.net_dst, self.net_w, self.net_bits]
+            sig = content_hash(*parts)
+            object.__setattr__(self, "_sibling_key", sig)
+        return sig
 
     def genotype_sizes(self) -> Dict[str, Tuple[int, ...]]:
         g = self.geom

@@ -5,6 +5,8 @@
     PYTHONPATH=src python -m repro.launch.serve --placement --device xcvu_test
     PYTHONPATH=src python -m repro.launch.serve --placement \
         --device xcvu_test2 --warm-from xcvu_test
+    PYTHONPATH=src python -m repro.launch.serve --placement \
+        --cache --policy deadline --autoscale
 
 `--placement` runs the batched placement-as-a-service engine
 (`serve.placement_service`): a fixed slot pool continuously batches many
@@ -13,6 +15,13 @@ concurrent placement jobs for one FPGA device into a single jitted step.
 it onto `--device` (`core.transfer`), and submits every job transfer-seeded
 (`submit(init_state=...)`); jobs then race the migrated champion's metric
 warm vs cold to show the Table II speedup direction live.
+
+The control-plane flags route the same workload through
+`serve.scheduler.PlacementScheduler` instead of a bare pool:
+`--cache [--cache-path P]` attaches a champion store (the second wave of
+identical jobs is answered from cache / warm-started), `--policy
+{round_robin,priority,deadline}` picks the pool-stepping policy, and
+`--autoscale` lets queue depth grow pools along the slot ladder.
 """
 import argparse
 import os
@@ -71,6 +80,101 @@ def placement_main(args) -> None:
           f"on {args.slots} slots; step compiles: {s['step_compiles']}")
 
 
+def control_plane_main(args) -> None:
+    """Placement traffic through the scheduler control plane: champion
+    cache (`--cache`), stepping policy (`--policy`), pool autoscaling
+    (`--autoscale`) -- two waves of the same workload so cache effects are
+    visible live."""
+    import time
+
+    from repro.core import nsga2
+    from repro.serve.champion_store import ChampionStore
+    from repro.serve.placement_service import make_job_specs
+    from repro.serve.scheduler import PlacementScheduler
+
+    store = (ChampionStore(path=args.cache_path)
+             if (args.cache or args.cache_path) else None)
+    sch = PlacementScheduler(n_slots=args.slots,
+                             gens_per_step=args.gens_per_step,
+                             policy=args.policy, store=store,
+                             autoscale=args.autoscale)
+
+    if args.warm_from:
+        # control-plane spelling of --warm-from: converge a champion on
+        # the base device and seed the STORE with it -- every job on
+        # --device then warm-starts via signature discovery, no caller
+        # init_state needed
+        if store is None:
+            raise SystemExit("--warm-from with a control-plane flag needs "
+                             "--cache (the champion rides in the store)")
+        import jax
+
+        from repro.core import transfer
+        from repro.core import objectives as O
+
+        base_prob = sch.problem(args.warm_from)
+        print(f"seeding store from {args.warm_from} "
+              f"({args.warm_gens} gens)...")
+        champ = transfer.converge_champion(base_prob, jax.random.PRNGKey(0),
+                                           2 * args.pop, args.warm_gens)
+        objs = O.evaluate(base_prob, champ)
+        store.put(base_prob, champ, float(O.combined_metric(objs)), objs,
+                  provenance={"source": "warm_from", "algo": "nsga2"})
+
+    def wave(tag, specs, **kw):
+        t0 = time.perf_counter()
+        jids = [sch.submit(args.device, s["cfg"], seed=s["seed"],
+                           budget=s["budget"], target=s.get("target"), **kw)
+                for s in specs]
+        done = {j.jid: j for j in sch.run_all()}
+        dt = time.perf_counter() - t0
+        for jid in jids:
+            j, r = done[jid], done[jid].result
+            how = ("cache-hit" if j.cached else
+                   "warm" if j.warm_from_cache else "cold")
+            print(f"  job{jid} [{how:9s}] {r.gens:3d} gens  "
+                  f"metric={r.metric:.3e}")
+        print(f"  {tag}: {len(jids)} jobs in {dt:.2f}s")
+        return done
+
+    specs = make_job_specs(args.requests, args.pop, args.gens)
+    if args.policy == "deadline":
+        # the last-submitted job is the most urgent; EDF picks which POOL
+        # steps, so the urgent job gets its own pool (half the pop size)
+        # and is served ahead of the earlier-submitted bulk pool
+        print("wave 1 (deadline policy: last job has the tight deadline)")
+        urgent_cfg = nsga2.NSGA2Config(pop_size=max(2, args.pop // 2))
+        for s in specs:
+            sch.submit(args.device, s["cfg"], seed=s["seed"],
+                       budget=s["budget"], deadline=1e9)
+        ujid = sch.submit(args.device, urgent_cfg, seed=0,
+                          budget=args.gens, deadline=1.0)
+        order = [j.jid for j in sch.run_all()]
+        print(f"  urgent job finished {order.index(ujid) + 1}/{len(order)}")
+    else:
+        print("wave 1 (cold)")
+        wave("wave 1", specs)
+    if store is not None:
+        # target against the serving device's OWN champion when it has
+        # one (metrics don't compare across devices), else the best entry
+        own = store.get(sch.problem(args.device).signature)
+        best = (own.metric if own is not None
+                else min(e.metric for e in store.entries()))
+        print(f"wave 2 (served against cache, target={best:.3e})")
+        wave("wave 2", [dict(s, target=best * 1.001) for s in specs])
+        print(f"  cache: {store.stats()}")
+        if args.cache_path:
+            print(f"  persisted {len(store)} champions -> "
+                  f"{store.save(args.cache_path)}")
+    s = sch.stats()
+    if args.autoscale:
+        print(f"autoscale events (pool, old, new): {s['autoscale_events']}")
+    print(f"{s['n_pools']} pools, policy={s['policy']}; per-pool sizes/"
+          f"compiles: " + ", ".join(
+              f"{ps['sizes']}x{ps['step_compiles']}"
+              for ps in s["pools"].values()))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -94,10 +198,25 @@ def main():
                          "this base device (e.g. xcvu_test)")
     ap.add_argument("--warm-gens", type=int, default=100,
                     help="generations to converge the base champion")
+    # control-plane flags (route through serve.scheduler)
+    ap.add_argument("--cache", action="store_true",
+                    help="attach a champion store: repeat jobs are served "
+                         "from cache / warm-started by signature")
+    ap.add_argument("--cache-path", default=None, metavar="JSON",
+                    help="persist the champion store to this JSON file")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=("round_robin", "priority", "deadline"),
+                    help="pool stepping policy (serve.policy)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="grow pools along the slot ladder on queue depth")
     args = ap.parse_args()
 
     if args.placement:
-        placement_main(args)
+        if (args.cache or args.cache_path or args.autoscale
+                or args.policy != "round_robin"):
+            control_plane_main(args)
+        else:
+            placement_main(args)
         return
     if args.arch is None:
         ap.error("--arch is required unless --placement is given")

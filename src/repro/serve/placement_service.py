@@ -91,6 +91,8 @@ class PlacementService:
         self.n_slots, self.gens_per_step = n_slots, gens_per_step
         self.static_key, base_traced = hyper.split_config(base_cfg)
         self.base_cfg = base_cfg
+        self._base_traced = dict(base_traced)   # grow() fills new slots
+        self.size_history: List[int] = [n_slots]  # every slot count compiled
         # host mirror of the per-slot traced hyperparameters
         self.traced = {k: np.full(n_slots, v, np.float32)
                        for k, v in base_traced.items()}
@@ -198,6 +200,47 @@ class PlacementService:
         self.slot_job[slot] = job
         return job.jid
 
+    # -------------------------------------------------------------- grow
+
+    def grow(self, n_slots: int) -> None:
+        """Rebuild the pool at a larger static slot count, carrying every
+        live slot's state over on the host.
+
+        The slot axis is a static shape, so the batched step compiles once
+        per *size* -- which is why callers (the scheduler's autoscaler)
+        restrict sizes to a small geometric ladder rather than growing by
+        one.  In-flight jobs are untouched: their states, hyperparameter
+        rows, seeds and generation counters keep their slot index, and a
+        job's trajectory depends only on (seed, gens) -- never the batch
+        width -- so results stay identical to a never-grown pool.  New
+        slots arrive vacant, filled with throwaway states (same discipline
+        as construction).
+        """
+        if n_slots <= self.n_slots:
+            raise ValueError(
+                f"grow() only grows: {n_slots} <= current {self.n_slots}")
+        extra = n_slots - self.n_slots
+        k_fill = jax.random.fold_in(self.key, 0x5eed + n_slots)
+        fill_traced = {k: jnp.full((extra,), v, jnp.float32)
+                       for k, v in self._base_traced.items()}
+        fill = portfolio._vinit(self.problem, self.algo, self.static_key,
+                                fill_traced, jax.random.split(k_fill, extra))
+        self.states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), self.states, fill)
+        self.traced = {
+            k: np.concatenate(
+                [v, np.full(extra, self._base_traced[k], np.float32)])
+            for k, v in self.traced.items()}
+        self._traced_cache = None
+        self.active = np.concatenate([self.active, np.zeros(extra, bool)])
+        self.slot_job.extend([None] * extra)
+        self.slot_seed = np.concatenate(
+            [self.slot_seed, np.zeros(extra, np.uint32)])
+        self.slot_gens = np.concatenate(
+            [self.slot_gens, np.zeros(extra, np.int32)])
+        self.n_slots = n_slots
+        self.size_history.append(n_slots)
+
     # -------------------------------------------------------------- step
 
     _traced_cache: Optional[Dict[str, jnp.ndarray]] = None
@@ -257,7 +300,9 @@ class PlacementService:
 
     @property
     def step_compiles(self) -> int:
-        """Distinct compilations of the batched step (must stay 1).
+        """Distinct compilations of the batched step: must stay 1 for a
+        fixed-size pool, and at most `len(size_history)` after `grow()`
+        (one compile per slot-count ladder size, never per job).
 
         Reads jax's private jit-cache counter; returns -1 (unknown) if a
         jax upgrade removes it, rather than breaking the service."""
@@ -286,4 +331,5 @@ class PlacementService:
             "steps": self.total_steps,
             "useful_gens": self.useful_gens,
             "step_compiles": self.step_compiles,
+            "sizes": list(self.size_history),
         }

@@ -1,28 +1,42 @@
-"""Multi-pool placement scheduler: heterogeneous jobs, one process.
+"""Placement control plane: signature cache, stepping policies, autoscaling.
 
 `PlacementService` pools are deliberately rigid: static config fields
 (pop_size, perm_swaps, reduced, schedule, ...), the algorithm, and the
 device problem are baked into each pool's compiled programs, which is what
 keeps its batched step recompile-free.  The scheduler is the layer above
-that restores flexibility without giving that up:
+that restores flexibility without giving that up -- and, since PR 3, the
+layer where cross-job knowledge lives:
 
-  * jobs are routed by *pool signature* -- (device, algo, static config
-    fields, gens_per_step) -- and a `PlacementService` pool is created
-    lazily the first time a signature appears,
-  * pools step round-robin (one pool's batched step per `step()` call), so
-    a process can race NSGA-II vs CMA-ES vs SA across pop sizes and
-    devices with fair interleaving on one accelerator,
-  * jobs that find their pool full wait in a per-pool FIFO and admit as
-    slots free up (the pool's own backpressure, made non-blocking).
+  * **routing** -- jobs are routed by *pool signature* (device, algo,
+    static config fields, gens_per_step); a `PlacementService` pool is
+    created lazily the first time a signature appears, and jobs that find
+    their pool full wait in a per-pool FIFO, admitting as slots free up,
+  * **champion cache** (`serve.champion_store`) -- every harvested result
+    writes its champion back under the problem's content signature
+    (`fpga.netlist.Problem.signature`).  On `submit()` the store is
+    consulted first: an exact-signature entry already meeting the job's
+    `target` is served *instantly* -- a finished job, zero generations, no
+    slot burned -- and otherwise the best exact-or-sibling champion is
+    auto-migrated (`core.transfer.auto_migrate`) into the job's
+    `init_state`, so the Table II transfer speedup happens inside the
+    serving layer instead of in caller code,
+  * **stepping policy** (`serve.policy`) -- each `step()` advances exactly
+    one pool's batched step; *which* pool is pluggable: `round_robin`
+    (default, PR 2 behaviour), `priority` (highest job priority first), or
+    `deadline` (earliest deadline first over pending + inflight),
+  * **autoscaling** -- with `autoscale=True`, a pool whose FIFO depth
+    crosses `autoscale_threshold` is rebuilt at the next size of a
+    geometric slot ladder (`PlacementService.grow`: live slots carry over;
+    one step recompile per ladder size, never per job, sizes capped at
+    `max_slots`).
 
-Each pool still compiles its step exactly once; per-job results remain
-pure functions of (config, seed, budget, init_state) -- identical to
-running the same job on a standalone service -- because pools never share
-PRNG streams and slot state is per-job (see `placement_service`).
-
-Warm starts compose: `submit(init_state=...)` forwards the seed genotype
-to the routed pool, so a single migrated champion can fan out across every
-device pool in the fleet (see `examples/placement_fleet.py`).
+Each pool still compiles its step once per slot-count size; per-job
+results remain pure functions of (config, seed, budget, init_state) --
+identical to running the same job on a standalone service -- because
+pools never share PRNG streams and slot state is per-job (see
+`placement_service`).  The cache changes *which* init_state a job gets,
+never the result of a given spec; with no store attached the scheduler is
+bitwise identical to the PR 2 router.
 """
 from __future__ import annotations
 
@@ -31,6 +45,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import hyper
 from repro.fpga.netlist import Problem
+from repro.serve import policy as P
+from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementJob, PlacementService
 
 PoolKey = Tuple[str, str, hyper.StaticKey, int]
@@ -44,8 +60,12 @@ class FleetJob:
     algo: str
     pool_key: PoolKey
     spec: Dict[str, Any]           # PlacementService.submit kwargs
+    priority: float = 0.0          # higher = more urgent (priority policy)
+    deadline: Optional[float] = None   # smaller = sooner (deadline policy)
     pool_jid: Optional[int] = None  # set at admission
     result: Optional[PlacementJob] = None
+    cached: bool = False           # served straight from the champion store
+    warm_from_cache: bool = False  # init_state injected by the store
 
     @property
     def done(self) -> bool:
@@ -53,18 +73,36 @@ class FleetJob:
 
 
 class PlacementScheduler:
-    """Routes placement jobs across lazily created per-signature pools."""
+    """Routes placement jobs across lazily created per-signature pools.
+
+    `store=ChampionStore(...)` turns on the champion cache, `policy=`
+    selects the stepping policy ("round_robin" / "priority" / "deadline"
+    or a `serve.policy.SteppingPolicy` instance), and `autoscale=True`
+    lets queue depth grow pools along a geometric slot ladder.
+    """
 
     def __init__(self, problems: Optional[Dict[str, Problem]] = None,
-                 n_slots: int = 4, gens_per_step: int = 4, seed: int = 0):
+                 n_slots: int = 4, gens_per_step: int = 4, seed: int = 0,
+                 policy="round_robin", store: Optional[ChampionStore] = None,
+                 autoscale: bool = False,
+                 autoscale_threshold: Optional[int] = None,
+                 max_slots: Optional[int] = None):
         self.n_slots, self.gens_per_step = n_slots, gens_per_step
         self.seed = seed
+        self.policy = P.get_policy(policy)
+        self.store = store
+        self.autoscale = autoscale
+        # default trigger: a full extra wave of jobs waiting behind the pool
+        self.autoscale_threshold = (n_slots if autoscale_threshold is None
+                                    else autoscale_threshold)
+        self.max_slots = 4 * n_slots if max_slots is None else max_slots
+        self.autoscale_events: List[Tuple[str, int, int]] = []
         self._problems: Dict[str, Problem] = dict(problems or {})
         self._pools: Dict[PoolKey, PlacementService] = {}
         self._pending: Dict[PoolKey, List[FleetJob]] = {}
         self._inflight: Dict[Tuple[PoolKey, int], FleetJob] = {}
-        self._rotation: List[PoolKey] = []     # round-robin order
-        self._next_pool = 0
+        self._rotation: List[PoolKey] = []     # stable pool order
+        self._cached_done: List[FleetJob] = []  # instant cache hits to drain
         self.next_jid = 0
         self.jobs: Dict[int, FleetJob] = {}
 
@@ -95,61 +133,147 @@ class PlacementScheduler:
             self._rotation.append(key)
         return self._pools[key]
 
+    # -------------------------------------------------------------- cache
+
+    def _consult_store(self, job: FleetJob, problem: Problem) -> bool:
+        """Champion-store fast paths for a submitted job.
+
+        Returns True when the job was answered instantly (exact-signature
+        entry already meeting its `target`: finished result, zero
+        generations, no pool touched).  Otherwise injects the best
+        exact-or-sibling champion as the job's `init_state` (unless the
+        caller supplied one) and returns False so the job runs warm.
+        """
+        entry, kind = self.store.lookup(problem)
+        if entry is None:
+            return False
+        target = job.spec.get("target")
+        if kind == "exact" and target is not None and entry.metric <= target:
+            job.result = PlacementJob(
+                jid=-1, cfg=job.spec.get("cfg"), seed=job.spec.get("seed"),
+                budget=0, target=target, gens=0, done=True,
+                best_objs=entry.best_objs.copy(), metric=entry.metric,
+                genotype={t: tuple(a.copy() for a in leaves)
+                          for t, leaves in entry.genotype.items()})
+            job.cached = True
+            self._cached_done.append(job)
+            return True
+        if job.spec.get("init_state") is None:
+            job.spec["init_state"] = self.store.seed_for(
+                problem, entry, problem_of=self.problem)
+            job.warm_from_cache = True
+        return False
+
+    def _write_back(self, job: FleetJob, problem: Problem) -> None:
+        pj = job.result
+        self.store.put(problem, pj.genotype, pj.metric, pj.best_objs,
+                       provenance={"device": job.device, "algo": job.algo,
+                                   "seed": pj.seed, "gens": pj.gens,
+                                   "fleet_jid": job.jid})
+
     # ------------------------------------------------------------- admit
 
     def submit(self, device: str, cfg, algo: str = "nsga2",
-               gens_per_step: Optional[int] = None, **spec) -> int:
+               gens_per_step: Optional[int] = None, priority: float = 0.0,
+               deadline: Optional[float] = None, **spec) -> int:
         """Enqueue one job; returns its scheduler-global jid.
 
         `spec` is forwarded to `PlacementService.submit` (seed, budget,
         target, init_state, jitter, sigma_shrink).  Unlike a raw pool,
         this never rejects: a full pool queues the job FIFO and admits it
-        when a slot frees.
+        when a slot frees.  `priority` / `deadline` only matter to the
+        matching stepping policies (they bias completion order, never
+        results).  With a champion store attached, an exact-signature
+        cache hit meeting `target` finishes the job immediately -- no pool
+        is created and no slot is burned -- and any other exact-or-sibling
+        champion warm-starts it via `init_state` injection.
         """
         key = self.pool_key(device, algo, cfg, gens_per_step)
-        self._pool(key, cfg)                   # create lazily
         job = FleetJob(self.next_jid, device, algo, key,
-                       spec=dict(spec, cfg=cfg))
+                       spec=dict(spec, cfg=cfg),
+                       priority=priority, deadline=deadline)
         self.next_jid += 1
         self.jobs[job.jid] = job
+        if self.store is not None and self._consult_store(
+                job, self.problem(device)):
+            return job.jid                 # served from cache, zero slots
+        self._pool(key, cfg)               # create lazily
         self._pending[key].append(job)
-        self._admit(key)
+        if len(self._pending[key]) == 1:   # a waiting head means pool full
+            self._admit(key)
         return job.jid
 
     def _admit(self, key: PoolKey) -> None:
+        """Drain the pool's FIFO head into free slots: O(jobs admitted),
+        with an O(1) early-out when the pool is already full."""
         pool, queue = self._pools[key], self._pending[key]
-        while queue:
-            pool_jid = pool.submit(**queue[0].spec)
-            if pool_jid is None:               # pool full
+        while queue and not pool.active.all():
+            job = queue[0]
+            pool_jid = pool.submit(**job.spec)
+            if pool_jid is None:           # pool full
                 break
-            job = queue.pop(0)
+            queue.pop(0)
             job.pool_jid = pool_jid
             self._inflight[(key, pool_jid)] = job
+
+    def _maybe_grow(self, key: PoolKey) -> None:
+        """Queue-depth autoscaling: double the pool along the geometric
+        slot ladder (n0, 2*n0, 4*n0, ... <= max_slots) when its FIFO
+        backs up.  Doubling keeps the compile count O(log max/n0) while
+        absorbing any sustained burst."""
+        pool = self._pools[key]
+        if (len(self._pending[key]) >= self.autoscale_threshold
+                and 2 * pool.n_slots <= self.max_slots):
+            old = pool.n_slots
+            pool.grow(2 * old)
+            self.autoscale_events.append((self._label(key), old,
+                                          pool.n_slots))
+            self._admit(key)               # the new slots fill immediately
 
     # -------------------------------------------------------------- step
 
     @property
     def busy(self) -> bool:
-        return bool(self._inflight) or any(self._pending.values())
+        return (bool(self._inflight) or bool(self._cached_done)
+                or any(self._pending.values()))
+
+    def _views(self) -> List[P.PoolView]:
+        by_pool: Dict[PoolKey, List[FleetJob]] = {k: [] for k
+                                                  in self._rotation}
+        for (key, _), job in self._inflight.items():
+            by_pool[key].append(job)
+        views = []
+        for i, key in enumerate(self._rotation):
+            pending = self._pending[key]
+            views.append(P.PoolView(
+                key=key, index=i,
+                steppable=bool(self._pools[key].active.any()),
+                queue_depth=len(pending),
+                jobs=by_pool[key] + pending))
+        return views
 
     def step(self) -> List[FleetJob]:
-        """Admit what fits everywhere, then advance ONE pool (round-robin)
-        by its batched step; returns newly finished fleet jobs."""
+        """Admit what fits everywhere (growing backed-up pools when
+        autoscaling), let the policy pick ONE pool, advance its batched
+        step; returns newly finished fleet jobs (instant cache hits are
+        drained here too)."""
+        finished, self._cached_done = self._cached_done, []
         for key in self._rotation:
-            self._admit(key)
-        finished: List[FleetJob] = []
-        for _ in range(len(self._rotation)):
-            key = self._rotation[self._next_pool % len(self._rotation)]
-            self._next_pool += 1
+            if self._pending[key]:
+                if self.autoscale:
+                    self._maybe_grow(key)
+                self._admit(key)
+        i = self.policy.select(self._views())
+        if i is not None:
+            key = self._rotation[i]
             pool = self._pools[key]
-            if not pool.active.any():
-                continue
             for pj in pool.step():
                 job = self._inflight.pop((key, pj.jid))
                 job.result = pj
+                if self.store is not None:
+                    self._write_back(job, self.problem(job.device))
                 finished.append(job)
-            self._admit(key)                   # freed slots refill now
-            break
+            self._admit(key)               # freed slots refill now
         return finished
 
     def run_all(self) -> List[FleetJob]:
@@ -162,16 +286,25 @@ class PlacementScheduler:
 
     # -------------------------------------------------------------- stats
 
+    def _label(self, key: PoolKey) -> str:
+        device_name, algo, static_key, gps = key
+        return f"{device_name}/{algo}/" + ",".join(
+            f"{k}={v}" for k, v in static_key[1]) + f"/gps={gps}"
+
     def stats(self) -> Dict[str, Any]:
         pools = {}
         for key in self._rotation:
-            device_name, algo, static_key, gps = key
-            label = f"{device_name}/{algo}/" + ",".join(
-                f"{k}={v}" for k, v in static_key[1]) + f"/gps={gps}"
-            pools[label] = self._pools[key].stats()
-        return {
+            pools[self._label(key)] = dict(
+                self._pools[key].stats(),
+                queue_depth=len(self._pending[key]))
+        out = {
             "n_pools": len(self._pools),
             "jobs_submitted": self.next_jid,
             "jobs_done": sum(j.done for j in self.jobs.values()),
+            "policy": getattr(self.policy, "name", type(self.policy).__name__),
+            "autoscale_events": list(self.autoscale_events),
             "pools": pools,
         }
+        if self.store is not None:
+            out["cache"] = self.store.stats()
+        return out

@@ -1,0 +1,376 @@
+"""Placement control plane: signatures, champion cache, policies, scaling.
+
+Covers the PR's acceptance contracts:
+  * `Problem`/`DeviceModel` content signatures: stable across rebuilds,
+    exact for identical geometry, sibling keys matching across the
+    `xcvu_test`/`xcvu_test2` pair, `transfer.auto_migrate` identity,
+  * the champion store: an exact-signature hit meeting `target` serves a
+    finished job without touching a pool, a sibling hit warm-starts it
+    (and beats a cold run to the same target), write-back only on strict
+    improvement, JSON persistence round-trips, and with no store the
+    scheduler's results are bitwise identical to a standalone service,
+  * stepping policies: round-robin cannot starve a pool behind a busy
+    neighbour, deadline = earliest-deadline-first, priority = highest
+    first, and policies change completion order, never results,
+  * autoscaling: queue depth grows a pool along the geometric slot
+    ladder, live jobs carry over, compiles stay O(#sizes), and per-job
+    results match a never-grown pool.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import nsga2, transfer
+from repro.core import genotype as G
+from repro.core import objectives as O
+from repro.fpga import device, netlist
+from repro.serve.champion_store import ChampionStore
+from repro.serve.placement_service import PlacementService
+from repro.serve.policy import (DeadlinePolicy, PoolView, PriorityPolicy,
+                                RoundRobinPolicy, get_policy)
+from repro.serve.scheduler import PlacementScheduler
+
+KEY = jax.random.PRNGKey(0)
+BASE = netlist.make_problem(device.get_device("xcvu_test"))
+SIB = netlist.make_problem(device.get_device("xcvu_test2"))
+
+
+@pytest.fixture(scope="module")
+def base_champion():
+    """A converged xcvu_test champion (shared: the convergence run
+    dominates this module's cost)."""
+    g = transfer.converge_champion(BASE, KEY, 32, 80)
+    return jax.tree.map(np.asarray, g)
+
+
+def _metric(problem, g) -> float:
+    return float(O.combined_metric(O.evaluate(problem, g)))
+
+
+# ------------------------------------------------------------- signatures
+
+def test_problem_signature_stable_and_content_keyed():
+    again = netlist.make_problem(device.get_device("xcvu_test"))
+    assert BASE.signature == again.signature
+    assert BASE.sibling_key == again.sibling_key
+    assert BASE.signature != SIB.signature          # different column xs
+    assert BASE.sibling_key == SIB.sibling_key      # same structure
+    vu3p = netlist.make_problem(device.get_device("xcvu3p"))
+    assert BASE.signature != vu3p.signature
+    assert BASE.sibling_key != vu3p.sibling_key     # different shape
+
+
+def test_device_signature_matches_problem_granularity():
+    d1, d2 = device.get_device("xcvu_test"), device.get_device("xcvu_test2")
+    assert d1.signature == device.get_device("xcvu_test").signature
+    assert d1.signature != d2.signature
+    assert d1.sibling_key == d2.sibling_key
+
+
+def test_auto_migrate_identity_on_same_signature():
+    g = G.random_genotype(KEY, BASE)
+    same = transfer.auto_migrate(BASE, BASE, g)
+    assert same is g                                 # no projection work
+    projected = transfer.auto_migrate(BASE, SIB, g)
+    O.assert_valid(SIB, projected)
+
+
+# --------------------------------------------------------- champion store
+
+def test_store_write_back_only_on_improvement(base_champion):
+    store = ChampionStore()
+    g_bad = G.random_genotype(KEY, BASE)
+    assert store.put(BASE, g_bad, _metric(BASE, g_bad),
+                     np.asarray(O.evaluate(BASE, g_bad)))
+    assert store.put(BASE, base_champion, _metric(BASE, base_champion),
+                     np.asarray(O.evaluate(BASE, base_champion)))
+    # a worse genotype must NOT replace the champion
+    assert not store.put(BASE, g_bad, _metric(BASE, g_bad),
+                         np.asarray(O.evaluate(BASE, g_bad)))
+    entry, kind = store.lookup(BASE)
+    assert kind == "exact"
+    np.testing.assert_allclose(entry.metric, _metric(BASE, base_champion))
+    assert len(store) == 1
+
+
+def test_store_persistence_round_trip(tmp_path, base_champion):
+    store = ChampionStore()
+    store.put(BASE, base_champion, _metric(BASE, base_champion),
+              np.asarray(O.evaluate(BASE, base_champion)),
+              provenance={"algo": "nsga2", "seed": 0})
+    path = str(tmp_path / "champions.json")
+    store.save(path)
+    with open(path) as f:
+        assert json.load(f)["champion_store"] == 1
+    loaded = ChampionStore(path=path)
+    entry, kind = loaded.lookup(BASE)
+    assert kind == "exact" and entry.provenance["algo"] == "nsga2"
+    for tier in ("dist", "loc", "perm"):
+        for t in range(3):
+            np.testing.assert_array_equal(
+                entry.genotype[tier][t], np.asarray(base_champion[tier][t]))
+    # the restored champion still serves as a legal warm seed
+    O.assert_valid(BASE, entry.genotype)
+    np.testing.assert_allclose(_metric(BASE, entry.genotype), entry.metric,
+                               rtol=1e-6)
+
+
+def test_exact_hit_serves_without_slot(base_champion):
+    store = ChampionStore()
+    store.put(BASE, base_champion, _metric(BASE, base_champion),
+              np.asarray(O.evaluate(BASE, base_champion)))
+    sch = PlacementScheduler(n_slots=2, gens_per_step=2, store=store)
+    target = _metric(BASE, base_champion) * 1.001
+    jid = sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=8),
+                     seed=3, budget=32, target=target)
+    # answered at submit: no pool was created, no slot burned
+    assert sch.stats()["n_pools"] == 0
+    (job,) = sch.run_all()
+    assert job.jid == jid and job.cached and job.done
+    assert job.result.gens == 0
+    assert job.result.metric <= target
+    O.assert_valid(BASE, job.result.genotype)
+    assert sch.stats()["n_pools"] == 0               # still no pool
+
+
+def test_sibling_hit_warm_beats_cold(base_champion):
+    """The store discovers the xcvu_test champion as a warm-start donor
+    for xcvu_test2 (sibling signature) and the warm job reaches the
+    migrated champion's metric in strictly fewer generations."""
+    store = ChampionStore()
+    store.put(BASE, base_champion, _metric(BASE, base_champion),
+              np.asarray(O.evaluate(BASE, base_champion)))
+    g_mig = transfer.migrate(BASE, SIB, base_champion)
+    target = _metric(SIB, g_mig)
+
+    cold = PlacementScheduler(n_slots=1, gens_per_step=2)   # no store
+    cold.submit("xcvu_test2", nsga2.NSGA2Config(pop_size=16),
+                seed=0, budget=60, target=target)
+    (cold_job,) = cold.run_all()
+
+    warm = PlacementScheduler(n_slots=1, gens_per_step=2, store=store)
+    jid = warm.submit("xcvu_test2", nsga2.NSGA2Config(pop_size=16),
+                      seed=0, budget=60, target=target)
+    (warm_job,) = warm.run_all()
+    assert warm_job.jid == jid
+    assert warm_job.warm_from_cache and not warm_job.cached
+    assert warm_job.result.metric <= target
+    assert warm_job.result.gens < cold_job.result.gens, (
+        f"warm {warm_job.result.gens} !< cold {cold_job.result.gens}")
+    # the sibling result wrote back under SIB's own signature
+    entry, kind = store.lookup(SIB)
+    assert kind == "exact" and entry.device_name == "xcvu_test2"
+
+
+def test_cache_disabled_matches_pr2_behaviour():
+    """store=None must leave the scheduler bitwise identical to routing
+    straight into a standalone service pool."""
+    spec = dict(seed=5, budget=6,
+                cfg=nsga2.NSGA2Config(pop_size=8, sbx_eta=7.0))
+    ref = PlacementService(SIB, spec["cfg"], n_slots=2, gens_per_step=2)
+    (ref_job,) = ref.run_jobs([spec])
+    sch = PlacementScheduler(n_slots=2, gens_per_step=2)
+    jid = sch.submit("xcvu_test2", spec["cfg"], seed=5, budget=6)
+    done = {j.jid: j for j in sch.run_all()}
+    np.testing.assert_array_equal(done[jid].result.best_objs,
+                                  ref_job.best_objs)
+
+
+def test_explicit_init_state_wins_over_cache(base_champion):
+    """A store injects init_state ONLY when the caller left it unset, and
+    an explicit init_state wins over the cache."""
+    g_explicit = G.random_genotype(KEY, BASE)
+    store = ChampionStore()
+    store.put(BASE, base_champion, _metric(BASE, base_champion),
+              np.asarray(O.evaluate(BASE, base_champion)))
+    sch = PlacementScheduler(n_slots=1, gens_per_step=2, store=store)
+    jid = sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=8),
+                     seed=2, budget=4, init_state=g_explicit)
+    done = {j.jid: j for j in sch.run_all()}
+    assert not done[jid].warm_from_cache
+    ref = PlacementService(BASE, nsga2.NSGA2Config(pop_size=8),
+                           n_slots=1, gens_per_step=2)
+    (ref_job,) = ref.run_jobs([dict(seed=2, budget=4,
+                                    init_state=g_explicit)])
+    np.testing.assert_array_equal(done[jid].result.best_objs,
+                                  ref_job.best_objs)
+
+
+# --------------------------------------------------------------- policies
+
+def _view(key, steppable, jobs, index=0):
+    return PoolView(key=key, index=index, steppable=steppable,
+                    queue_depth=0, jobs=jobs)
+
+
+class _J:
+    def __init__(self, priority=0.0, deadline=None):
+        self.priority, self.deadline = priority, deadline
+
+
+def test_round_robin_pointer_advances_past_stepped_pools():
+    rr = RoundRobinPolicy()
+    views = [_view("a", True, []), _view("b", True, []),
+             _view("c", False, [])]
+    picks = [rr.select(views) for _ in range(4)]
+    assert picks == [0, 1, 0, 1]                    # c never steppable
+    views[2] = _view("c", True, [])
+    assert rr.select(views) == 2                     # c's turn comes
+
+
+def test_priority_and_deadline_policies_order():
+    pr = PriorityPolicy()
+    views = [_view("a", True, [_J(priority=1.0)]),
+             _view("b", True, [_J(priority=5.0)])]
+    assert pr.select(views) == 1
+    edf = DeadlinePolicy()
+    views = [_view("a", True, [_J(deadline=None)]),
+             _view("b", True, [_J(deadline=9.0), _J(deadline=2.0)]),
+             _view("c", True, [_J(deadline=5.0)])]
+    assert edf.select(views) == 1                    # min deadline 2.0
+    with pytest.raises(KeyError):
+        get_policy("nope")
+
+
+def test_scheduler_fairness_two_uneven_pools():
+    """Regression: a small pool behind a perpetually busy pool must not
+    starve -- with round-robin both pools step alternately, so the small
+    pool's jobs finish long before the busy pool drains."""
+    sch = PlacementScheduler(n_slots=2, gens_per_step=2)
+    big = nsga2.NSGA2Config(pop_size=16)
+    small = nsga2.NSGA2Config(pop_size=8)
+    for s in range(6):           # pool A: always busy (6 jobs, 2 slots)
+        sch.submit("xcvu_test", big, seed=s, budget=8)
+    jids_b = [sch.submit("xcvu_test", small, seed=s, budget=4)
+              for s in range(2)]
+    done_at = {}
+    t = 0
+    while sch.busy:
+        t += 1
+        for j in sch.step():
+            done_at[j.jid] = t
+    # pool B needed 2 of its own steps; fair alternation finishes it
+    # within ~4 fleet steps -- starvation would push it past pool A
+    assert all(done_at[j] <= 6 for j in jids_b), done_at
+    assert max(done_at[j] for j in jids_b) < max(done_at.values())
+
+
+def test_deadline_policy_beats_round_robin_for_urgent_job():
+    """An urgent (tight-deadline) job submitted AFTER bulk work finishes
+    first under EDF, and does not under plain round-robin."""
+    bulk_cfg = nsga2.NSGA2Config(pop_size=16)
+    urgent_cfg = nsga2.NSGA2Config(pop_size=8)
+
+    def run(policy):
+        sch = PlacementScheduler(n_slots=1, gens_per_step=2, policy=policy)
+        bulk = [sch.submit("xcvu_test", bulk_cfg, seed=s, budget=4)
+                for s in range(2)]
+        urgent = sch.submit("xcvu_test", urgent_cfg, seed=0, budget=4,
+                            deadline=1.0)
+        order = [j.jid for j in sch.run_all()]
+        return order.index(urgent), [order.index(b) for b in bulk]
+
+    edf_urgent, edf_bulk = run("deadline")
+    rr_urgent, rr_bulk = run("round_robin")
+    assert edf_urgent < min(edf_bulk)                # EDF: urgent first
+    assert rr_urgent > min(rr_bulk)                  # RR interleaves
+
+
+def test_priority_policy_prefers_high_priority_pool():
+    sch = PlacementScheduler(n_slots=1, gens_per_step=2, policy="priority")
+    lo = sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=16),
+                    seed=0, budget=4, priority=0.0)
+    hi = sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=8),
+                    seed=0, budget=4, priority=10.0)
+    order = [j.jid for j in sch.run_all()]
+    assert order.index(hi) < order.index(lo)
+
+
+def test_policy_changes_order_not_results():
+    spec = dict(seed=4, budget=6, cfg=nsga2.NSGA2Config(pop_size=8))
+    results = {}
+    for policy in ("round_robin", "deadline", "priority"):
+        sch = PlacementScheduler(n_slots=1, gens_per_step=2, policy=policy)
+        jid = sch.submit("xcvu_test", spec["cfg"], seed=4, budget=6,
+                         deadline=5.0, priority=1.0)
+        sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=16), seed=1,
+                   budget=4)
+        done = {j.jid: j for j in sch.run_all()}
+        results[policy] = done[jid].result.best_objs
+    np.testing.assert_array_equal(results["round_robin"],
+                                  results["deadline"])
+    np.testing.assert_array_equal(results["round_robin"],
+                                  results["priority"])
+
+
+# ------------------------------------------------------------ elasticity
+
+def test_grow_carries_live_jobs_and_matches_standalone():
+    specs = [dict(seed=i, budget=6, cfg=nsga2.NSGA2Config(pop_size=8))
+             for i in range(4)]
+    ref = PlacementService(BASE, nsga2.NSGA2Config(pop_size=8),
+                           n_slots=1, gens_per_step=2)
+    ref_objs = {j.seed: j.best_objs for j in ref.run_jobs(list(specs))}
+
+    svc = PlacementService(BASE, nsga2.NSGA2Config(pop_size=8),
+                           n_slots=1, gens_per_step=2)
+    assert svc.submit(**specs[0]) is not None
+    assert svc.submit(**specs[1]) is None            # full at 1 slot
+    svc.step()                                       # job 0 mid-flight
+    svc.grow(2)
+    svc.grow(4)
+    for s in specs[1:]:
+        assert svc.submit(**s) is not None
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    assert len(done) == 4
+    assert svc.size_history == [1, 2, 4]
+    for j in done:
+        np.testing.assert_allclose(j.best_objs, ref_objs[j.seed],
+                                   rtol=1e-5)
+    # one compile per ladder size at most (-1 = counter unavailable)
+    assert svc.step_compiles in (-1, 2, 3)
+    with pytest.raises(ValueError):
+        svc.grow(2)
+
+
+def test_scheduler_autoscales_on_queue_depth():
+    sch = PlacementScheduler(n_slots=1, gens_per_step=2, autoscale=True,
+                             autoscale_threshold=2, max_slots=4)
+    jids = [sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=8),
+                       seed=i, budget=4) for i in range(6)]
+    done = {j.jid: j for j in sch.run_all()}
+    assert sorted(done) == jids
+    assert sch.autoscale_events, "queue depth 5 >= 2 must trigger growth"
+    (label,) = sch.stats()["pools"]
+    pool_stats = sch.stats()["pools"][label]
+    sizes = pool_stats["sizes"]
+    assert sizes[0] == 1 and sizes == sorted(sizes)
+    assert all(b == 2 * a for a, b in zip(sizes, sizes[1:]))  # ladder
+    assert sizes[-1] <= 4
+    # at most one step compile per ladder size ever reached
+    assert (pool_stats["step_compiles"] == -1
+            or pool_stats["step_compiles"] <= len(sizes))
+    assert pool_stats["queue_depth"] == 0
+    # autoscaled results still match a standalone never-grown service
+    ref = PlacementService(BASE, nsga2.NSGA2Config(pop_size=8),
+                           n_slots=1, gens_per_step=2)
+    ref_objs = {j.seed: j.best_objs for j in ref.run_jobs(
+        [dict(seed=i, budget=4) for i in range(6)])}
+    for j in done.values():
+        np.testing.assert_allclose(j.result.best_objs,
+                                   ref_objs[j.result.seed], rtol=1e-5)
+
+
+def test_queue_depth_exposed_in_stats():
+    sch = PlacementScheduler(n_slots=1, gens_per_step=2)
+    for i in range(3):
+        sch.submit("xcvu_test", nsga2.NSGA2Config(pop_size=8),
+                   seed=i, budget=4)
+    (label,) = sch.stats()["pools"]
+    assert sch.stats()["pools"][label]["queue_depth"] == 2
+    sch.run_all()
+    assert sch.stats()["pools"][label]["queue_depth"] == 0
