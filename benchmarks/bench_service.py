@@ -38,6 +38,14 @@ The serving-perf trajectory, one JSON per run.  Four measurements:
     geometric slot ladder; compiles stay bounded by the number of ladder
     sizes (`compiles_within_ladder`) and every job's objectives match a
     standalone never-grown service (`jobs_match_standalone`).
+  * **islands**: within-job scaling (`core.islands`): P island
+    sub-populations per slot with ring champion migration reach a
+    single-population run's combined-metric target in measurably fewer
+    wallclock steps at an equal total evaluation budget
+    (`speedup_steps`, `islands_fewer_steps`); an islands pool still
+    compiles its batched step exactly once (`islands_single_compile`)
+    and `islands(P=1)` is bitwise identical to the single-population
+    `evolve.run` (`islands_match_single_pop`) -- both hard CI gates.
 
 JSON contract (consumed by `benchmarks.check_bench` and future trend
 tooling -- keys are append-only):
@@ -58,7 +66,12 @@ tooling -- keys are append-only):
           edf_urgent_rank,priority_urgent_rank,policy_deadline_meets_order},
   autoscale.{n_jobs,n_slots_initial,max_slots,pop_size,sizes,
              step_compiles,budget_gens,gens_per_step,wall_s,jobs_per_sec,
-             compiles_within_ladder,jobs_match_standalone}
+             compiles_within_ladder,jobs_match_standalone},
+  islands.{n_islands,migrate_every,pop_size,budget_gens,gens_per_step,
+           target_metric,single_gens_to_target,islands_gens_to_target,
+           single_hit_target,islands_hit_target,wall_s_islands,
+           speedup_steps,islands_fewer_steps,islands_single_compile,
+           islands_match_single_pop}
 """
 from __future__ import annotations
 
@@ -72,6 +85,7 @@ import numpy as np
 from benchmarks import common
 from repro.core import evolve, nsga2, cmaes, transfer, portfolio
 from repro.core import objectives as O
+from repro.core.islands import IslandConfig
 from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementService, make_job_specs
 from repro.serve.scheduler import PlacementScheduler
@@ -348,6 +362,91 @@ def bench_autoscale(dev: str, n_jobs: int, pop: int, budget: int,
     }
 
 
+def _islands_match_single_pop(prob, pop: int, n_gens: int = 6) -> bool:
+    """Degeneracy gate: `islands(P=1)` is bitwise the single-population
+    `evolve.run` -- history AND every final state leaf."""
+    cfg = nsga2.NSGA2Config(pop_size=pop)
+    key = jax.random.PRNGKey(3)
+    st_s, h_s = evolve.run(prob, "nsga2", cfg, key, n_gens)
+    st_i, h_i = evolve.run(prob, "nsga2", cfg, key, n_gens,
+                           islands=IslandConfig(1, 0))
+    ok = np.array_equal(np.asarray(h_s), np.asarray(h_i)[:, 0])
+    for a, b in zip(jax.tree.leaves(st_s), jax.tree.leaves(st_i)):
+        ok = ok and np.array_equal(np.asarray(a), np.asarray(b)[0])
+    return bool(ok)
+
+
+def _gens_to_target(prob, cfg, islands, seed: int, budget: int,
+                    target, gens_per_step: int):
+    svc = PlacementService(prob, cfg, n_slots=1,
+                           gens_per_step=gens_per_step, islands=islands)
+    svc.submit(seed=seed, budget=budget, target=target)
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    return done[0]
+
+
+def bench_islands(prob, pop: int, n_islands: int, migrate_every: int,
+                  budget: int, gens_per_step: int) -> dict:
+    """Within-job scaling: P islands per slot vs a single population.
+
+    Both contestants chase the same combined-metric target (where a
+    single population lands with ~2/3 of the budget) under EQUAL total
+    evaluation budgets: the single-population job may run `budget` gens
+    at pop evals each, the islands job `budget / P` gens at P x pop
+    evals each.  Islands burn their evals in parallel -- P x the
+    candidates per service step -- so they reach the target in fewer
+    wallclock steps (`speedup_steps`).  `islands_single_compile` (an
+    islands pool still compiles its batched step exactly once across
+    rolling admission) and `islands_match_single_pop` (P=1 is bitwise
+    the single-population run) are hard CI gates.
+    """
+    cfg = nsga2.NSGA2Config(pop_size=pop)
+    match = _islands_match_single_pop(prob, pop)
+
+    probe = _gens_to_target(prob, cfg, None, seed=123,
+                            budget=(2 * budget) // 3, target=None,
+                            gens_per_step=gens_per_step)
+    target = float(probe.metric)
+    single = _gens_to_target(prob, cfg, None, 0, budget, target,
+                             gens_per_step)
+    icfg = IslandConfig(n_islands, migrate_every)
+    t0 = time.perf_counter()
+    isl = _gens_to_target(prob, cfg, icfg, 0, max(budget // n_islands,
+                                                  gens_per_step),
+                          target, gens_per_step)
+    wall_islands = time.perf_counter() - t0
+    # a gens-to-target only counts if the target was actually reached
+    # inside the budget -- exhausting the budget is not "reaching"
+    single_hit = bool(single.metric <= target)
+    islands_hit = bool(isl.metric <= target)
+
+    # single-compile under rolling admission: more jobs than slots, each
+    # with its own float hyperparameters, one islands pool
+    svc = PlacementService(prob, cfg, n_slots=2,
+                           gens_per_step=gens_per_step, islands=icfg)
+    done = svc.run_jobs(make_job_specs(3, pop, 2 * gens_per_step, seed=55))
+    single_compile = (len(done) == 3 and all(j.done for j in done)
+                      and svc.step_compiles in (1, -1))
+    return {
+        "n_islands": n_islands, "migrate_every": migrate_every,
+        "pop_size": pop, "budget_gens": budget,
+        "gens_per_step": gens_per_step,
+        "target_metric": target,
+        "single_gens_to_target": single.gens,
+        "islands_gens_to_target": isl.gens,
+        "single_hit_target": single_hit,
+        "islands_hit_target": islands_hit,
+        "wall_s_islands": round(wall_islands, 4),
+        "speedup_steps": round(single.gens / max(isl.gens, 1), 2),
+        "islands_fewer_steps": bool(islands_hit and
+                                    isl.gens < single.gens),
+        "islands_single_compile": bool(single_compile),
+        "islands_match_single_pop": match,
+    }
+
+
 def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
     """mode: smoke (CI PR gate) < quick (default) < full (paper-scale)."""
     smoke, full = mode == "smoke", mode == "full"
@@ -388,6 +487,14 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
     autoscale = bench_autoscale(
         dev, n_jobs=6 if not full else 12, pop=16 if not full else 64,
         budget=8 if smoke else 16, gens_per_step=4)
+    # the islands budget does NOT shrink in smoke mode (same reasoning as
+    # `transfer`): the single-population contestant must genuinely reach
+    # the probe target inside its budget for gens-to-target to mean
+    # anything -- 48 gens is the verified-convergent smoke/quick config
+    isl = bench_islands(
+        prob, pop=16 if not full else 32,
+        n_islands=4 if not full else 8, migrate_every=2,
+        budget=48 if not full else 96, gens_per_step=2)
     report = {
         "bench": "placement_service",
         "created_unix": int(time.time()),
@@ -402,6 +509,7 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
         "cache": cache,
         "policy": pol,
         "autoscale": autoscale,
+        "islands": isl,
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

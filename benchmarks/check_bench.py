@@ -18,7 +18,11 @@ Hard failures (exit 1) -- correctness of the serving contracts:
   * `policy.policy_deadline_meets_order` false (EDF stopped putting the
     urgent job first, or round-robin started to),
   * `autoscale.compiles_within_ladder` / `autoscale.jobs_match_standalone`
-    false (growing a pool recompiled per job or changed answers).
+    false (growing a pool recompiled per job or changed answers),
+  * `islands.islands_match_single_pop` false (the island model's P=1
+    degeneracy to the single-population run broke -- key-stream or
+    migration drift) or `islands.islands_single_compile` false (an
+    islands pool started recompiling its batched step).
 
 Throughput deltas vs `--baseline` are WARN-ONLY: CI machines are noisy,
 so jobs/sec regressions are reported for humans, never enforced, and only
@@ -58,6 +62,12 @@ REQUIRED: Dict[str, List[str]] = {
                   "sizes", "step_compiles", "budget_gens", "gens_per_step",
                   "wall_s", "jobs_per_sec", "compiles_within_ladder",
                   "jobs_match_standalone"],
+    "islands": ["n_islands", "migrate_every", "pop_size", "budget_gens",
+                "gens_per_step", "target_metric", "single_gens_to_target",
+                "islands_gens_to_target", "single_hit_target",
+                "islands_hit_target", "wall_s_islands", "speedup_steps",
+                "islands_fewer_steps", "islands_single_compile",
+                "islands_match_single_pop"],
 }
 TOP_LEVEL = ["bench", "created_unix", "mode", "device", "jax_version",
              "backend"]
@@ -80,6 +90,10 @@ BOOLEANS = [
      "autoscaled pool compiled more than once per ladder size"),
     ("autoscale", "jobs_match_standalone",
      "autoscaled pool changed per-job results vs a standalone service"),
+    ("islands", "islands_match_single_pop",
+     "islands(P=1) diverged from the single-population run"),
+    ("islands", "islands_single_compile",
+     "islands pool recompiled its batched step (or dropped jobs)"),
 ]
 
 # (section, throughput key, shape keys that must match to compare)

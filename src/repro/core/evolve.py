@@ -2,15 +2,20 @@
 
 `run` compiles an entire optimization (init + n_gens generations) into one
 XLA program via `lax.scan`, recording the per-generation best for the
-convergence benchmarks (paper Fig. 7b).
+convergence benchmarks (paper Fig. 7b).  Passing `islands=IslandConfig(P,
+G)` dispatches to `core.islands`: P sub-populations with ring champion
+migration every G generations, still one program (`islands(P=1)` is
+bitwise this module's single-population run).
 
-`run_islands` is the distributed runtime: each mesh device along the given
-axis evolves an independent island; every `gens_per_round` generations the
-islands exchange their champions over a ring (`all_gather` + replace-worst).
-Migration cadence bounds the synchronisation frequency -- one slow island
-delays peers at most once per round (straggler posture; DESIGN.md SS5).
-The same code drives 1 CPU device and a 512-chip pod slice: only the mesh
-changes.
+`run_islands` is the legacy round-synchronous distributed runtime: each
+mesh device along the given axis evolves an independent island; every
+`gens_per_round` generations the islands exchange their champions over a
+ring (`all_gather` + replace-worst).  Migration cadence bounds the
+synchronisation frequency -- one slow island delays peers at most once per
+round (straggler posture; DESIGN.md SS5).  The same code drives 1 CPU
+device and a 512-chip pod slice: only the mesh changes.  New code should
+prefer `core.islands` (per-generation cadence, ppermute ring, service
+integration); this entry stays for the dry-run cells.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from repro.core import hyper
 from repro.core import objectives as O
 from repro.fpga.netlist import Problem
 
+from repro.runtime import jaxcompat as jc
 from repro.runtime.jaxcompat import make_mesh as _make_mesh
 from repro.runtime.jaxcompat import shard_map as _shard_map
 
@@ -76,9 +82,24 @@ def _run_impl(problem: Problem, algo: str, cfg, key: jax.Array, n_gens: int
     return state, hist
 
 
-run = functools.partial(jax.jit, static_argnums=(0, 1, 2, 4))(_run_impl)
-run.__doc__ = ("Full optimization in one program.  "
-               "Returns (state, history[n_gens,2]).")
+_run_single = functools.partial(jax.jit, static_argnums=(0, 1, 2, 4))(
+    _run_impl)
+
+
+def run(problem: Problem, algo: str, cfg, key: jax.Array, n_gens: int,
+        islands=None) -> Tuple[Dict, jnp.ndarray]:
+    """Full optimization in one program.
+
+    Returns (state, history[n_gens, 2]).  With `islands=IslandConfig(P,
+    migrate_every)` the run dispatches to `core.islands.run`: P
+    sub-populations with ring champion migration, returning island-stacked
+    states [P, ...] and per-island history [n_gens, P, 2] (bitwise the
+    single-population result at P=1).
+    """
+    if islands is None:
+        return _run_single(problem, algo, cfg, key, n_gens)
+    from repro.core import islands as I
+    return I.run(problem, algo, cfg, key, n_gens, islands=islands)
 
 
 def run_islands(problem: Problem, algo: str, cfg, key: jax.Array,
@@ -124,11 +145,11 @@ def run_islands(problem: Problem, algo: str, cfg, key: jax.Array,
             bi = jnp.argmin(c)
             champ = jax.tree.map(lambda a: a[bi], st["pop"])
             # all_gather over a tuple of axes flattens to one leading dim
-            all_champ = jax.lax.all_gather(champ, axes)
-            all_objs = jax.lax.all_gather(st["objs"][bi], axes)
+            all_champ = jc.all_gather(champ, axes)
+            all_objs = jc.all_gather(st["objs"][bi], axes)
             idx = jnp.int32(0)
             for a in axes:
-                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+                idx = idx * mesh.shape[a] + jc.axis_index(a)
             nbr = (idx + 1) % n_islands
             mig = jax.tree.map(lambda a: a[nbr], all_champ)
             mig_objs = all_objs[nbr]

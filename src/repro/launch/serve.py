@@ -7,6 +7,8 @@
         --device xcvu_test2 --warm-from xcvu_test
     PYTHONPATH=src python -m repro.launch.serve --placement \
         --cache --policy deadline --autoscale
+    PYTHONPATH=src python -m repro.launch.serve --placement \
+        --islands 4 --migrate-every 4
 
 `--placement` runs the batched placement-as-a-service engine
 (`serve.placement_service`): a fixed slot pool continuously batches many
@@ -22,9 +24,20 @@ The control-plane flags route the same workload through
 identical jobs is answered from cache / warm-started), `--policy
 {round_robin,priority,deadline}` picks the pool-stepping policy, and
 `--autoscale` lets queue depth grow pools along the slot ladder.
+`--islands N [--migrate-every G]` makes every slot run N island
+sub-populations with ring champion migration (`core.islands`) -- per-job
+quality scales with N at the same wallclock step count.
 """
 import argparse
 import os
+
+
+def _island_config(args):
+    """--islands N [--migrate-every G] -> IslandConfig (None when off)."""
+    if args.islands <= 1:
+        return None
+    from repro.core.islands import IslandConfig
+    return IslandConfig(args.islands, args.migrate_every)
 
 
 def placement_main(args) -> None:
@@ -38,7 +51,8 @@ def placement_main(args) -> None:
     prob = netlist.make_problem(device.get_device(args.device))
     base = nsga2.NSGA2Config(pop_size=args.pop)
     svc = PlacementService(prob, base, n_slots=args.slots,
-                           gens_per_step=args.gens_per_step)
+                           gens_per_step=args.gens_per_step,
+                           islands=_island_config(args))
     specs = make_job_specs(args.requests, args.pop, args.gens)
 
     if args.warm_from:
@@ -75,9 +89,13 @@ def placement_main(args) -> None:
               f"warm mean {np.mean(warm):.1f} "
               f"({np.mean(cold) / max(np.mean(warm), 1e-9):.1f}x fewer)")
     s = svc.stats()
+    isl = (f", {s['n_islands']} islands/slot "
+           f"(migrate every {s['migrate_every']})"
+           if s["n_islands"] > 1 else "")
     print(f"{len(done)} jobs in {dt:.2f}s "
           f"({len(done)/dt:.2f} jobs/s, {s['useful_gens']/dt:.1f} gens/s) "
-          f"on {args.slots} slots; step compiles: {s['step_compiles']}")
+          f"on {args.slots} slots{isl}; step compiles: "
+          f"{s['step_compiles']}")
 
 
 def control_plane_main(args) -> None:
@@ -94,6 +112,7 @@ def control_plane_main(args) -> None:
 
     store = (ChampionStore(path=args.cache_path)
              if (args.cache or args.cache_path) else None)
+    icfg = _island_config(args)
     sch = PlacementScheduler(n_slots=args.slots,
                              gens_per_step=args.gens_per_step,
                              policy=args.policy, store=store,
@@ -124,7 +143,8 @@ def control_plane_main(args) -> None:
     def wave(tag, specs, **kw):
         t0 = time.perf_counter()
         jids = [sch.submit(args.device, s["cfg"], seed=s["seed"],
-                           budget=s["budget"], target=s.get("target"), **kw)
+                           budget=s["budget"], target=s.get("target"),
+                           islands=icfg, **kw)
                 for s in specs]
         done = {j.jid: j for j in sch.run_all()}
         dt = time.perf_counter() - t0
@@ -146,9 +166,9 @@ def control_plane_main(args) -> None:
         urgent_cfg = nsga2.NSGA2Config(pop_size=max(2, args.pop // 2))
         for s in specs:
             sch.submit(args.device, s["cfg"], seed=s["seed"],
-                       budget=s["budget"], deadline=1e9)
+                       budget=s["budget"], deadline=1e9, islands=icfg)
         ujid = sch.submit(args.device, urgent_cfg, seed=0,
-                          budget=args.gens, deadline=1.0)
+                          budget=args.gens, deadline=1.0, islands=icfg)
         order = [j.jid for j in sch.run_all()]
         print(f"  urgent job finished {order.index(ujid) + 1}/{len(order)}")
     else:
@@ -193,6 +213,12 @@ def main():
     ap.add_argument("--gens", type=int, default=64,
                     help="generation budget per placement job")
     ap.add_argument("--gens-per-step", type=int, default=4)
+    ap.add_argument("--islands", type=int, default=1, metavar="N",
+                    help="island sub-populations per slot (core.islands); "
+                         "1 = single-population pools")
+    ap.add_argument("--migrate-every", type=int, default=4, metavar="G",
+                    help="generations between ring champion migrations "
+                         "inside an islands slot")
     ap.add_argument("--warm-from", default=None, metavar="DEVICE",
                     help="transfer-seed jobs from a champion converged on "
                          "this base device (e.g. xcvu_test)")

@@ -1,17 +1,26 @@
 """Version-spanning shims for jax APIs that moved between releases.
 
 The container pins jax 0.4.x while parts of this codebase were written
-against the current API.  Two call sites drifted:
+against the current API.  The call sites that drifted:
 
   * `shard_map`: top-level `jax.shard_map(..., check_vma=)` now,
     `jax.experimental.shard_map.shard_map(..., check_rep=)` on 0.4.x.
   * `jax.make_mesh`: grew an `axis_types=` kwarg (`jax.sharding.AxisType`)
     after 0.4.x; plain construction is equivalent for our Auto meshes.
+  * axis-name collectives: `jax.lax.axis_size` only exists on newer jax
+    (0.4.x spells it `psum(1, axis)`), and the blessed import path for the
+    others has moved before.  `axis_index` / `axis_size` / `psum` /
+    `ppermute` / `all_gather` below are the uniform axis-name API every
+    shard_mapped caller (core.islands ring migration, evolve.run_islands,
+    launch.mesh) consumes, plus `ring_perm` for the canonical
+    champion-ring permutation.
 
-Route every mesh/shard_map use through here so a jax upgrade is a
-one-file change.
+Route every mesh/shard_map/collective use through here so a jax upgrade
+is a one-file change.
 """
 from __future__ import annotations
+
+from typing import List, Tuple
 
 import jax
 
@@ -41,3 +50,46 @@ def make_mesh(shape, names) -> jax.sharding.Mesh:
             shape, names,
             axis_types=(jax.sharding.AxisType.Auto,) * len(names))
     return jax.make_mesh(shape, names)                 # jax <= 0.4.x
+
+
+# ------------------------------------------------ axis-name collectives
+#
+# Thin, version-stable wrappers: callers never import jax.lax collectives
+# directly, so a future rename (like shard_map's) stays a one-file change.
+
+def axis_index(axis: str) -> jax.Array:
+    """This shard's index along a shard_map/pmap axis name."""
+    return jax.lax.axis_index(axis)
+
+
+if hasattr(jax.lax, "axis_size"):
+    def axis_size(axis: str) -> int:
+        """Number of shards along an axis name."""
+        return jax.lax.axis_size(axis)
+else:                                                  # jax <= 0.4.x
+    def axis_size(axis: str) -> int:
+        """Number of shards along an axis name (0.4.x spelling)."""
+        return jax.lax.psum(1, axis_name=axis)
+
+
+def psum(x, axis: str):
+    """Sum `x` across all shards of an axis name."""
+    return jax.lax.psum(x, axis_name=axis)
+
+
+def ppermute(x, axis: str, perm: List[Tuple[int, int]]):
+    """Send `x` along (source, destination) pairs over an axis name."""
+    return jax.lax.ppermute(x, axis_name=axis, perm=perm)
+
+
+def all_gather(x, axis, tiled: bool = False):
+    """Gather `x` from every shard along one axis name (or a tuple of
+    names, flattened into one leading dim)."""
+    return jax.lax.all_gather(x, axis, tiled=tiled)
+
+
+def ring_perm(n: int) -> List[Tuple[int, int]]:
+    """The champion-ring permutation: shard i sends to shard (i+1) % n,
+    so every receiver adopts its *left* neighbour's payload -- the same
+    direction as `jnp.roll(x, 1, axis=0)` on an unsharded stack."""
+    return [(i, (i + 1) % n) for i in range(n)]

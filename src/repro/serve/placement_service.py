@@ -34,6 +34,17 @@ Warm starts: `submit(init_state=...)` seeds a job from a genotype (e.g.
 `core.transfer.migrate`'s projection of a sibling-device champion) via a
 per-pool jitted warm-init program (`core.warmstart`) -- the transfer
 serving path of paper SS IV-D.
+
+Islands: `PlacementService(..., islands=IslandConfig(P, migrate_every))`
+makes every slot hold P island sub-populations (`core.islands`) instead of
+one: slot states grow a leading island axis, the batched step vmaps the
+islands round (P independent `step_impl`s + ring champion migration at
+global-generation boundaries) over the slot axis, and harvest returns the
+best genotype across a slot's islands.  The island config is static --
+part of the pool's compiled-program signature, like pop_size -- so an
+islands pool keeps the exact serving discipline above (one step compile,
+jobs come and go by content).  Warm seeds land on island 0 and diffuse to
+the other islands via migration.
 """
 from __future__ import annotations
 
@@ -46,7 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hyper, portfolio, warmstart
+from repro.core import islands as islands_mod
 from repro.core import objectives as O
+from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
 
 
@@ -86,9 +99,15 @@ class PlacementService:
     """Continuous-batching placement engine for one `Problem`."""
 
     def __init__(self, problem: Problem, base_cfg, algo: str = "nsga2",
-                 n_slots: int = 8, gens_per_step: int = 4, seed: int = 0):
+                 n_slots: int = 8, gens_per_step: int = 4, seed: int = 0,
+                 islands: Optional[IslandConfig] = None):
         self.problem, self.algo = problem, algo
         self.n_slots, self.gens_per_step = n_slots, gens_per_step
+        # island topology is static pool identity, exactly like pop_size:
+        # P > 1 swaps the slot programs for their island-stacked mirrors
+        # (`core.islands`); P == 1 keeps the original single-population
+        # programs bit for bit
+        self.islands = islands or IslandConfig()
         self.static_key, base_traced = hyper.split_config(base_cfg)
         self.base_cfg = base_cfg
         self._base_traced = dict(base_traced)   # grow() fills new slots
@@ -109,22 +128,46 @@ class PlacementService:
         self.total_steps = 0
         self.useful_gens = 0       # active-slot generations actually served
 
-        # per-pool jitted programs; problem/algo/static config are closure
-        # constants, so each compiles exactly once for the pool's shapes.
-        # Step keys derive inside the program from (slot seed, slot gens),
-        # so the host ships two small int arrays, not key material.
-        self._init_fn = jax.jit(functools.partial(
-            portfolio.member_init, problem, algo, self.static_key))
+        # per-pool jitted programs; problem/algo/static config (and the
+        # island config) are closure constants, so each compiles exactly
+        # once for the pool's shapes.  Step keys derive inside the program
+        # from (slot seed, slot gens), so the host ships two small int
+        # arrays, not key material.
+        icfg = self.islands
+        if icfg.active:
+            self._init_fn = jax.jit(functools.partial(
+                islands_mod.member_init, problem, algo, self.static_key,
+                icfg))
+            self._fill_fn = functools.partial(
+                islands_mod._vinit, problem, algo, self.static_key, icfg)
+        else:
+            self._init_fn = jax.jit(functools.partial(
+                portfolio.member_init, problem, algo, self.static_key))
+            self._fill_fn = functools.partial(
+                portfolio._vinit, problem, algo, self.static_key)
         # warm-start init: the seed block rides as a traced operand at the
         # pool's canonical shape (`warmstart.seed_rows`), so transfer-seeded
-        # jobs share ONE compiled warm-init regardless of their hyperparams
+        # jobs share ONE compiled warm-init regardless of their hyperparams.
+        # Islands pools seed island 0 and let migration spread it.
         self._seed_rows = warmstart.seed_rows(algo, self.static_key)
-        self._warm_init_fn = jax.jit(functools.partial(
-            warmstart.member_warm_init, problem, algo, self.static_key))
+        if icfg.active:
+            self._warm_init_fn = jax.jit(functools.partial(
+                islands_mod.member_warm_init, problem, algo,
+                self.static_key, icfg))
+        else:
+            self._warm_init_fn = jax.jit(functools.partial(
+                warmstart.member_warm_init, problem, algo, self.static_key))
 
         def _step(traced, states, seeds, gens):
             def one(tr, st, s, g):
                 key = jax.random.fold_in(jax.random.PRNGKey(s), g)
+                if icfg.active:
+                    # g doubles as the migration phase: boundaries are
+                    # counted in global generations, invariant to
+                    # gens_per_step chunking and admission timing
+                    return islands_mod.member_round(
+                        problem, algo, self.static_key, icfg,
+                        gens_per_step, tr, st, key, g)
                 return portfolio.member_round(
                     problem, algo, self.static_key, gens_per_step,
                     tr, st, key)
@@ -135,9 +178,8 @@ class PlacementService:
         # fill the pool with throwaway states so step() shapes exist from
         # the first call (vacant slots evolve garbage; it is never read)
         k_fill = jax.random.fold_in(self.key, 0x5eed)
-        self.states = portfolio._vinit(problem, algo, self.static_key,
-                                       self._traced_dev(),
-                                       jax.random.split(k_fill, n_slots))
+        self.states = self._fill_fn(self._traced_dev(),
+                                    jax.random.split(k_fill, n_slots))
 
     # ------------------------------------------------------------- admit
 
@@ -223,8 +265,7 @@ class PlacementService:
         k_fill = jax.random.fold_in(self.key, 0x5eed + n_slots)
         fill_traced = {k: jnp.full((extra,), v, jnp.float32)
                        for k, v in self._base_traced.items()}
-        fill = portfolio._vinit(self.problem, self.algo, self.static_key,
-                                fill_traced, jax.random.split(k_fill, extra))
+        fill = self._fill_fn(fill_traced, jax.random.split(k_fill, extra))
         self.states = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b], axis=0), self.states, fill)
         self.traced = {
@@ -289,8 +330,12 @@ class PlacementService:
 
     def _harvest(self, slot: int, job: PlacementJob) -> None:
         state = jax.tree.map(lambda a: a[slot], self.states)
-        g, objs = portfolio.best_genotype(self.problem, self.algo, state,
-                                          job.cfg)
+        if self.islands.active:
+            g, objs = islands_mod.best_genotype(self.problem, self.algo,
+                                                state, job.cfg)
+        else:
+            g, objs = portfolio.best_genotype(self.problem, self.algo,
+                                              state, job.cfg)
         job.genotype = jax.tree.map(np.asarray, g)
         job.best_objs = np.asarray(objs)
         job.metric = float(O.combined_metric(job.best_objs))
@@ -332,4 +377,6 @@ class PlacementService:
             "useful_gens": self.useful_gens,
             "step_compiles": self.step_compiles,
             "sizes": list(self.size_history),
+            "n_islands": self.islands.n_islands,
+            "migrate_every": self.islands.migrate_every,
         }

@@ -44,12 +44,15 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import hyper
+from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
 from repro.serve import policy as P
 from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementJob, PlacementService
 
-PoolKey = Tuple[str, str, hyper.StaticKey, int]
+# (device, algo, static config fields, gens_per_step, island config) --
+# everything that picks a compiled program, so each pool compiles once
+PoolKey = Tuple[str, str, hyper.StaticKey, int, IslandConfig]
 
 
 @dataclasses.dataclass
@@ -117,18 +120,20 @@ class PlacementScheduler:
         return self._problems[device_name]
 
     def pool_key(self, device_name: str, algo: str, cfg,
-                 gens_per_step: Optional[int] = None) -> PoolKey:
+                 gens_per_step: Optional[int] = None,
+                 islands: Optional[IslandConfig] = None) -> PoolKey:
         static_key, _ = hyper.split_config(cfg)
         return (device_name, algo, static_key,
-                gens_per_step or self.gens_per_step)
+                gens_per_step or self.gens_per_step,
+                islands or IslandConfig())
 
     def _pool(self, key: PoolKey, cfg) -> PlacementService:
         if key not in self._pools:
-            device_name, algo, _static, gps = key
+            device_name, algo, _static, gps, icfg = key
             self._pools[key] = PlacementService(
                 self.problem(device_name), cfg, algo=algo,
                 n_slots=self.n_slots, gens_per_step=gps,
-                seed=self.seed)
+                seed=self.seed, islands=icfg)
             self._pending[key] = []
             self._rotation.append(key)
         return self._pools[key]
@@ -175,7 +180,8 @@ class PlacementScheduler:
 
     def submit(self, device: str, cfg, algo: str = "nsga2",
                gens_per_step: Optional[int] = None, priority: float = 0.0,
-               deadline: Optional[float] = None, **spec) -> int:
+               deadline: Optional[float] = None,
+               islands: Optional[IslandConfig] = None, **spec) -> int:
         """Enqueue one job; returns its scheduler-global jid.
 
         `spec` is forwarded to `PlacementService.submit` (seed, budget,
@@ -186,9 +192,13 @@ class PlacementScheduler:
         results).  With a champion store attached, an exact-signature
         cache hit meeting `target` finishes the job immediately -- no pool
         is created and no slot is burned -- and any other exact-or-sibling
-        champion warm-starts it via `init_state` injection.
+        champion warm-starts it via `init_state` injection.  `islands`
+        routes the job to an island-model pool (`core.islands`): island
+        topology is part of the pool signature, so islands and
+        single-population traffic for the same config coexist in separate
+        pools, each still compiling once.
         """
-        key = self.pool_key(device, algo, cfg, gens_per_step)
+        key = self.pool_key(device, algo, cfg, gens_per_step, islands)
         job = FleetJob(self.next_jid, device, algo, key,
                        spec=dict(spec, cfg=cfg),
                        priority=priority, deadline=deadline)
@@ -287,9 +297,12 @@ class PlacementScheduler:
     # -------------------------------------------------------------- stats
 
     def _label(self, key: PoolKey) -> str:
-        device_name, algo, static_key, gps = key
-        return f"{device_name}/{algo}/" + ",".join(
+        device_name, algo, static_key, gps, icfg = key
+        label = f"{device_name}/{algo}/" + ",".join(
             f"{k}={v}" for k, v in static_key[1]) + f"/gps={gps}"
+        if icfg.active:
+            label += f"/isl={icfg.n_islands}x{icfg.migrate_every}"
+        return label
 
     def stats(self) -> Dict[str, Any]:
         pools = {}

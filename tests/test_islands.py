@@ -1,0 +1,262 @@
+"""Island-model evolution subsystem (`core.islands`).
+
+Covers the contracts the serving stack leans on:
+  * degeneracy -- islands(P=1) is bitwise the single-population
+    `evolve.run` (full state for nsga2/ga/cmaes; SA's chain position may
+    differ in the last ulp because vmap turns its `lax.switch` move into
+    compute-all-branches-and-select, but every observable -- history,
+    fitness, best state -- stays bitwise),
+  * determinism -- islands results are a pure function of (config, seed,
+    budget, init_state, island config): same seed twice is bitwise equal,
+  * migration -- the champion ring moves island i's champion to island
+    i+1 (replace-worst for populations), boundaries counted in *global*
+    generations so chunked service rounds migrate on the same schedule,
+  * service -- an islands pool keeps the single-compile discipline, P=1
+    pools match plain pools, warm seeds land on island 0 and diffuse,
+  * sharding (`multidevice`) -- the shard_map + ppermute path computes
+    the same result as the single-device vmap stack.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import annealing, cmaes, evolve, ga, nsga2
+from repro.core import genotype as G
+from repro.core import islands as I
+from repro.core import objectives as O
+from repro.core.islands import IslandConfig
+from repro.serve.placement_service import PlacementService
+
+KEY = jax.random.PRNGKey(0)
+P4 = IslandConfig(n_islands=4, migrate_every=2)
+
+
+def _assert_leaves(tree_a, tree_b, island=None, exact=True):
+    for a, b in zip(jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)):
+        b = np.asarray(b) if island is None else np.asarray(b)[island]
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a), b)
+        else:
+            np.testing.assert_allclose(np.asarray(a), b, rtol=1e-6)
+
+
+# ------------------------------------------------------------ degeneracy
+
+@pytest.mark.parametrize("algo,cfg", [
+    ("nsga2", nsga2.NSGA2Config(pop_size=8)),
+    ("nsga2", nsga2.NSGA2Config(pop_size=8, reduced=True)),
+    ("ga", ga.GAConfig(pop_size=8)),
+    ("cmaes", cmaes.CMAESConfig(pop_size=8)),
+])
+def test_p1_bitwise_identity(small_problem, algo, cfg):
+    st_s, h_s = evolve.run(small_problem, algo, cfg, KEY, 5)
+    st_i, h_i = evolve.run(small_problem, algo, cfg, KEY, 5,
+                           islands=IslandConfig(1, 0))
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_i)[:, 0])
+    _assert_leaves(st_s, st_i, island=0)
+
+
+def test_p1_identity_sa(small_problem):
+    cfg = annealing.SAConfig()
+    st_s, h_s = evolve.run(small_problem, "sa", cfg, KEY, 5)
+    st_i, h_i = evolve.run(small_problem, "sa", cfg, KEY, 5,
+                           islands=IslandConfig(1, 0))
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_i)[:, 0])
+    for k in st_s:
+        a, b = np.asarray(st_s[k]), np.asarray(st_i[k])[0]
+        if k == "z":   # vmapped lax.switch: last-ulp chain-position drift
+            np.testing.assert_allclose(a, b, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+def test_island_keys_p1_is_callers_key():
+    keys = I.island_keys(KEY, 1)
+    np.testing.assert_array_equal(np.asarray(keys[0]), np.asarray(KEY))
+    assert I.island_keys(KEY, 4).shape[0] == 4
+
+
+def test_invalid_island_config():
+    with pytest.raises(ValueError):
+        IslandConfig(n_islands=0)
+    with pytest.raises(ValueError):
+        IslandConfig(n_islands=2, migrate_every=-1)
+
+
+# ----------------------------------------------------------- determinism
+
+def test_same_seed_bitwise_identical(small_problem):
+    cfg = nsga2.NSGA2Config(pop_size=8)
+    st1, h1 = evolve.run(small_problem, "nsga2", cfg, KEY, 6, islands=P4)
+    st2, h2 = evolve.run(small_problem, "nsga2", cfg, KEY, 6, islands=P4)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    _assert_leaves(st1, st2)
+    assert np.asarray(h1).shape == (6, 4, 2)
+    c = np.asarray(O.combined_metric(jnp.asarray(h1)))
+    assert c[-1].min() <= c[0].min()
+
+
+# ------------------------------------------------------------- migration
+
+def _stacked_state(problem, n_islands, pop=6):
+    cfg = nsga2.NSGA2Config(pop_size=pop)
+    keys = jax.random.split(KEY, n_islands)
+    return jax.vmap(
+        lambda k: nsga2.init_state(problem, k, cfg))(keys)
+
+
+def test_ring_moves_champion_to_right_neighbour(small_problem):
+    state = _stacked_state(small_problem, 4)
+    champs, cobjs = jax.vmap(I.champion)(state)
+    worst = np.asarray(jax.vmap(
+        lambda s: jnp.argmax(O.combined_metric(s["objs"])))(state))
+    out = I.migrate_ring(state)
+    for i in range(4):
+        src = (i - 1) % 4
+        # island i's former worst row now holds island i-1's champion
+        np.testing.assert_array_equal(
+            np.asarray(out["objs"])[i, worst[i]], np.asarray(cobjs)[src])
+        for a, b in zip(jax.tree.leaves(
+                jax.tree.map(lambda x: x[i, worst[i]], out["pop"])),
+                jax.tree.leaves(jax.tree.map(lambda x: x[src], champs))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_planted_champion_diffuses_around_ring(small_problem):
+    """A super-champion planted on island 0 walks one hop per migration."""
+    state = _stacked_state(small_problem, 4)
+    best = jnp.asarray([0.0, 0.0], jnp.float32)   # unbeatable objectives
+    state["objs"] = state["objs"].at[0, 0].set(best)
+    hops = state
+    reached = {0}
+    for _ in range(3):
+        hops = I.migrate_ring(hops)
+        reached = {i for i in range(4)
+                   if (np.asarray(hops["objs"])[i] == 0.0).all(-1).any()}
+    assert reached == {0, 1, 2, 3}
+
+
+def test_point_algo_adopts_only_on_improvement(small_problem):
+    cfg = cmaes.CMAESConfig(pop_size=6)
+    keys = jax.random.split(KEY, 2)
+    state = jax.vmap(
+        lambda k: cmaes.init_state(small_problem, k, cfg))(keys)
+    state["best_objs"] = jnp.asarray([[1.0, 1.0], [2.0, 2.0]], jnp.float32)
+    out = I.migrate_ring(state)
+    # island 1 (worse) adopts island 0's champion; island 0 keeps its own
+    np.testing.assert_array_equal(np.asarray(out["best_objs"][1]),
+                                  np.asarray(state["best_objs"][0]))
+    np.testing.assert_array_equal(np.asarray(out["best_z"][1]),
+                                  np.asarray(state["best_z"][0]))
+    np.testing.assert_array_equal(np.asarray(out["best_objs"][0]),
+                                  np.asarray(state["best_objs"][0]))
+    np.testing.assert_array_equal(np.asarray(out["mean"][1]),
+                                  np.asarray(state["best_z"][0]))
+
+
+def test_migration_counts_global_generations(small_problem):
+    """round_impl chunked as 2+2 gens with carried g0 equals one 4-gen
+    call: the service's gens_per_step chunking cannot shift migration
+    boundaries."""
+    cfg = nsga2.NSGA2Config(pop_size=6)
+    icfg = IslandConfig(4, 2)
+    state = _stacked_state(small_problem, 4)
+    gen_keys = jnp.stack([jax.random.split(jax.random.fold_in(KEY, g), 4)
+                          for g in range(4)])
+    whole, _ = I.round_impl(small_problem, "nsga2", icfg, cfg, state,
+                            gen_keys, jnp.int32(0))
+    half, _ = I.round_impl(small_problem, "nsga2", icfg, cfg, state,
+                           gen_keys[:2], jnp.int32(0))
+    chunked, _ = I.round_impl(small_problem, "nsga2", icfg, cfg, half,
+                              gen_keys[2:], jnp.int32(2))
+    _assert_leaves(whole, chunked)
+
+
+# --------------------------------------------------------------- service
+
+def _drain(svc):
+    done = []
+    while svc.active.any():
+        done.extend(svc.step())
+    return done
+
+
+def test_islands_pool_single_compile_and_reproducible(small_problem):
+    cfg = nsga2.NSGA2Config(pop_size=6)
+    svc = PlacementService(small_problem, cfg, n_slots=2, gens_per_step=2,
+                           islands=IslandConfig(4, 2))
+    # rolling admission: 4 jobs through 2 slots, one compiled step
+    done = {j.seed: j for j in svc.run_jobs(
+        [dict(seed=s, budget=4) for s in range(4)])}
+    assert len(done) == 4 and svc.step_compiles in (1, -1)
+    assert svc.stats()["n_islands"] == 4
+
+    svc2 = PlacementService(small_problem, cfg, n_slots=2, gens_per_step=2,
+                            islands=IslandConfig(4, 2))
+    (again,) = svc2.run_jobs([dict(seed=1, budget=4)])
+    np.testing.assert_array_equal(again.best_objs, done[1].best_objs)
+    _assert_leaves(again.genotype, done[1].genotype)
+
+
+def test_p1_pool_matches_plain_pool(small_problem):
+    cfg = nsga2.NSGA2Config(pop_size=6)
+    plain = PlacementService(small_problem, cfg, n_slots=1,
+                             gens_per_step=2)
+    isl = PlacementService(small_problem, cfg, n_slots=1, gens_per_step=2,
+                           islands=IslandConfig(1, 0))
+    (a,) = plain.run_jobs([dict(seed=0, budget=4)])
+    (b,) = isl.run_jobs([dict(seed=0, budget=4)])
+    np.testing.assert_array_equal(a.best_objs, b.best_objs)
+    _assert_leaves(a.genotype, b.genotype)
+
+
+def test_warm_seed_lands_on_island0(small_problem):
+    cfg = nsga2.NSGA2Config(pop_size=6)
+    svc = PlacementService(small_problem, cfg, n_slots=1, gens_per_step=2,
+                           islands=IslandConfig(4, 2))
+    g = G.random_genotype(jax.random.PRNGKey(9), small_problem)
+    svc.submit(seed=0, budget=4, init_state=g, jitter=0.0)
+    # before stepping: island 0 row 0 of slot 0 is the unperturbed seed,
+    # and with jitter=0 every island-0 row is an exact copy
+    slot0 = jax.tree.map(lambda a: a[0], svc.states)
+    _assert_leaves(g, jax.tree.map(lambda a: a[0, 0], slot0["pop"]))
+    _drain(svc)
+
+
+# -------------------------------------------------------------- sharding
+
+@pytest.mark.multidevice
+def test_sharded_islands_match_vmap(small_problem, island_mesh):
+    """The shard_map + boundary-ppermute ring computes the same states
+    and history as the single-device vmap stack."""
+    ndev = jax.device_count()
+    icfg = IslandConfig(n_islands=ndev, migrate_every=2)
+    cfg = nsga2.NSGA2Config(pop_size=6)
+    st_v, h_v = I.run(small_problem, "nsga2", cfg, KEY, 6, islands=icfg,
+                      shard=False)
+    st_s, h_s = I.run(small_problem, "nsga2", cfg, KEY, 6, islands=icfg,
+                      mesh=island_mesh)
+    np.testing.assert_allclose(np.asarray(h_v), np.asarray(h_s),
+                               rtol=1e-6)
+    _assert_leaves(st_v, st_s, exact=False)
+
+
+@pytest.mark.multidevice
+def test_auto_shard_is_deterministic(small_problem):
+    """shard='auto' (islands divisible by device count) stays a pure
+    function of the inputs."""
+    icfg = IslandConfig(n_islands=jax.device_count(), migrate_every=2)
+    cfg = nsga2.NSGA2Config(pop_size=6)
+    st1, h1 = I.run(small_problem, "nsga2", cfg, KEY, 4, islands=icfg)
+    st2, h2 = I.run(small_problem, "nsga2", cfg, KEY, 4, islands=icfg)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    _assert_leaves(st1, st2)
+
+
+def test_mesh_without_islands_axis_rejected(small_problem):
+    from repro.runtime.jaxcompat import make_mesh
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError):
+        I.run(small_problem, "nsga2", nsga2.NSGA2Config(pop_size=6), KEY,
+              2, islands=IslandConfig(2, 1), mesh=mesh)

@@ -1,5 +1,8 @@
 """Transfer learning + post-placement pipelining behaviour."""
+import dataclasses
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -88,6 +91,70 @@ def test_auto_pipeline_hits_target():
     rep = pipelining.auto_pipeline(prob, g, target_mhz=500.0)
     assert rep.freq_mhz >= 500.0
     assert rep.total_registers >= 0
+
+
+def test_vu11p_zero_stage_anchor_650mhz(vu11p_problem, monkeypatch):
+    """Timing-model calibration anchor (paper Table I): the converged
+    NSGA-II VU11P placement's wirelength profile -- max net ~62.6 RPM --
+    reads ~650 MHz with ZERO extra pipeline stages.
+
+    The profile is pinned rather than re-derived by search (converging
+    VU11P to paper quality is CPU-infeasible in a test); what this locks
+    down is the model itself: anyone re-tuning `T_BASE_NS` /
+    `K_NS_PER_RPM` off the paper's operating point fails here.
+    """
+    ref_lens = jnp.full(vu11p_problem.n_nets, 10.0, jnp.float32)
+    ref_lens = ref_lens.at[0].set(62.6)     # the converged critical net
+    monkeypatch.setattr(pipelining.O, "net_lengths",
+                        lambda p, g: ref_lens)
+    f0 = pipelining.frequency_at_depth(vu11p_problem, None, 0)
+    assert abs(f0 - 650.0) <= 10.0
+    # "with zero extra stages": auto-pipelining to the paper's 650 MHz
+    # target inserts no registers on the reference profile
+    rep = pipelining.auto_pipeline(vu11p_problem, None, target_mhz=650.0)
+    assert rep.depth == 0 and rep.total_registers == 0
+    assert abs(rep.freq_mhz - 650.0) <= 10.0
+
+
+def test_fmax_ceiling_never_exceeded():
+    """891 MHz URAM/DSP hard Fmax: no placement and no pipelining depth
+    may read above it, and infinite depth saturates exactly AT it (the
+    1/T_BASE asymptote ~909 MHz sits above the ceiling)."""
+    prob = netlist.make_problem(device.get_device("xcvu_test"))
+    for seed in range(3):
+        g = G.random_genotype(jax.random.PRNGKey(seed), prob)
+        for depth in (0, 1, 2, 8, 64, 4096):
+            f = pipelining.frequency_at_depth(prob, g, depth)
+            assert f <= pipelining.F_CEIL_MHZ
+        assert (pipelining.frequency_at_depth(prob, g, 10 ** 6)
+                == pipelining.F_CEIL_MHZ)
+        rep = pipelining.auto_pipeline(prob, g, target_mhz=880.0)
+        assert rep.freq_mhz <= pipelining.F_CEIL_MHZ
+    # targets above the model's logic floor are rejected, not clipped
+    with pytest.raises(ValueError):
+        pipelining.auto_pipeline(prob, g, target_mhz=1000.0)
+
+
+def test_register_cost_scales_with_bus_width_and_replication():
+    """Register bill = stages x net bus width x full-chip replication:
+    doubling `net_bits` doubles it, tripling `n_rects` triples it, and
+    it is linear in uniform depth."""
+    prob = netlist.make_problem(device.get_device("xcvu_test"))
+    d = 3
+    base = pipelining.registers_at_depth(prob, d)
+    assert base == int(prob.net_bits.sum()) * d * prob.n_rects
+    wide = dataclasses.replace(prob, net_bits=prob.net_bits * 2)
+    repl = dataclasses.replace(prob, n_rects=prob.n_rects * 3)
+    assert pipelining.registers_at_depth(wide, d) == 2 * base
+    assert pipelining.registers_at_depth(repl, d) == 3 * base
+    assert pipelining.registers_at_depth(prob, 2 * d) == 2 * base
+    # per-net (auto) pipelining bills the same way
+    g = G.random_genotype(KEY, prob)
+    r1 = pipelining.auto_pipeline(prob, g, 500.0)
+    assert (pipelining.auto_pipeline(wide, g, 500.0).total_registers
+            == 2 * r1.total_registers)
+    assert (pipelining.auto_pipeline(repl, g, 500.0).total_registers
+            == 3 * r1.total_registers)
 
 
 def test_better_placement_needs_fewer_registers():
