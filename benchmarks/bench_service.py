@@ -47,6 +47,16 @@ The serving-perf trajectory, one JSON per run.  Four measurements:
     and `islands(P=1)` is bitwise identical to the single-population
     `evolve.run` (`islands_match_single_pop`) -- both hard CI gates.
 
+  * **kernels**: the fused Pallas evaluation pipeline
+    (`kernels.fused_eval`) vs the unfused two-op dispatch at EQUAL
+    workload shape: candidate evaluations/sec for both paths (best-of-k
+    jitted steady state), the fused/unfused speedup, and two differential
+    correctness gates -- the tiled kernel body (interpret mode) matching
+    `ref.fused_eval_ref` on the real problem extents (`fused_match_ref`)
+    and the fused domination counts matching the domination matrix
+    (`dom_counts_match_ref`).  Both booleans are hard CI gates; the
+    throughputs are warn-only trend keys.
+
 JSON contract (consumed by `benchmarks.check_bench` and future trend
 tooling -- keys are append-only):
   bench, created_unix, mode, device, jax_version, backend,
@@ -71,7 +81,10 @@ tooling -- keys are append-only):
            target_metric,single_gens_to_target,islands_gens_to_target,
            single_hit_target,islands_hit_target,wall_s_islands,
            speedup_steps,islands_fewer_steps,islands_single_compile,
-           islands_match_single_pop}
+           islands_match_single_pop},
+  kernels.{pop_size,n_nets,n_units,n_gids,reps,evals_per_sec_fused,
+           evals_per_sec_unfused,fused_speedup,fused_match_ref,
+           dom_counts_match_ref}
 """
 from __future__ import annotations
 
@@ -447,6 +460,85 @@ def bench_islands(prob, pop: int, n_islands: int, migrate_every: int,
     }
 
 
+def bench_kernels(prob, pop: int, reps: int = 40, timed_rounds: int = 12
+                  ) -> dict:
+    """Fused vs unfused evaluation at equal workload shape + differential
+    correctness of the tiled kernel bodies on the problem's real extents.
+
+    Throughput is the best of `timed_rounds` interleaved samples of `reps`
+    jitted `evaluate_population` calls (post-compile, block_until_ready),
+    reported at 3 significant figures -- run-to-run noise on a shared CI
+    machine is well above 0.1%, so finer digits are spurious precision.
+    On CPU both paths dispatch to the same ref-oracle composition and
+    lower to the same XLA program (verified: identical fusion/while
+    counts), so a best-sample gap below the ~3% measurement resolution is
+    a tie and reports the pooled best for both paths instead of
+    coin-flipping the ordering; a genuinely different path (the TPU
+    Pallas kernel vs materialised intermediates) clears 3% trivially.
+    Correctness runs the Pallas bodies in interpret mode against the
+    `ref.py` oracles -- the same differential contract as
+    `tests/test_fused_eval.py`, here on the real decode extents.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import genotype as G
+    from repro.kernels import fused_eval as FE
+    from repro.kernels import ref
+
+    keys = jax.random.split(jax.random.PRNGKey(11), pop)
+    popn = jax.vmap(lambda k: G.random_genotype(k, prob))(keys)
+
+    # differential gates on the real extents
+    bx, by = jax.vmap(lambda g: G.decode(prob, g))(popn)
+    s, d = jnp.asarray(prob.net_src), jnp.asarray(prob.net_dst)
+    w = jnp.asarray(prob.net_w)
+    uidx = O.unit_index(prob)
+    got = np.asarray(FE.fused_eval_pallas(bx, by, s, d, w, uidx,
+                                          interpret=True))
+    want = np.asarray(ref.fused_eval_ref(bx, by, s, d, w, uidx))
+    fused_match_ref = bool(np.allclose(got, want, rtol=1e-5, atol=1e-6))
+    objs = jnp.asarray(want)
+    dom, cnt = FE.domination_counts_pallas(objs, interpret=True)
+    dref = np.asarray(ref.domination_ref(objs))
+    dom_counts_match_ref = bool(
+        np.array_equal(np.asarray(dom.astype(bool)), dref)
+        and np.array_equal(np.asarray(cnt), dref.astype(np.int32).sum(0)))
+
+    def sample(fused: bool) -> float:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = O.evaluate_population(prob, popn, fused)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    # warm both compiles, then interleave the timed rounds so clock/cache
+    # drift on a busy CI machine cannot systematically favour whichever
+    # path happens to be measured first
+    jax.block_until_ready(O.evaluate_population(prob, popn, False))
+    jax.block_until_ready(O.evaluate_population(prob, popn, True))
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(timed_rounds):
+        for fused in (False, True):
+            best[fused] = min(best[fused], sample(fused))
+    pooled = min(best[False], best[True])
+    if abs(best[True] - best[False]) / pooled < 0.03:
+        best = {False: pooled, True: pooled}      # tie below resolution
+    eps_unfused = float(f"{reps * pop / best[False]:.3g}")
+    eps_fused = float(f"{reps * pop / best[True]:.3g}")
+    return {
+        "pop_size": pop,
+        "n_nets": int(np.asarray(prob.net_src).shape[0]),
+        "n_units": int(prob.n_units),
+        "n_gids": int(bx.shape[-1]),
+        "reps": reps,
+        "evals_per_sec_fused": eps_fused,
+        "evals_per_sec_unfused": eps_unfused,
+        "fused_speedup": round(eps_fused / max(eps_unfused, 1e-9), 3),
+        "fused_match_ref": fused_match_ref,
+        "dom_counts_match_ref": dom_counts_match_ref,
+    }
+
+
 def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
     """mode: smoke (CI PR gate) < quick (default) < full (paper-scale)."""
     smoke, full = mode == "smoke", mode == "full"
@@ -495,6 +587,8 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
         prob, pop=16 if not full else 32,
         n_islands=4 if not full else 8, migrate_every=2,
         budget=48 if not full else 96, gens_per_step=2)
+    kern = bench_kernels(prob, pop=64 if not full else 256,
+                         reps=40 if smoke else 60)
     report = {
         "bench": "placement_service",
         "created_unix": int(time.time()),
@@ -510,6 +604,7 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
         "policy": pol,
         "autoscale": autoscale,
         "islands": isl,
+        "kernels": kern,
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

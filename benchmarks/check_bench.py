@@ -22,7 +22,11 @@ Hard failures (exit 1) -- correctness of the serving contracts:
   * `islands.islands_match_single_pop` false (the island model's P=1
     degeneracy to the single-population run broke -- key-stream or
     migration drift) or `islands.islands_single_compile` false (an
-    islands pool started recompiling its batched step).
+    islands pool started recompiling its batched step),
+  * `kernels.fused_match_ref` false (the fused Pallas evaluation body
+    diverged from the `ref.py` oracles on the real problem extents) or
+    `kernels.dom_counts_match_ref` false (the fused domination counts
+    diverged from the domination matrix).
 
 Throughput deltas vs `--baseline` are WARN-ONLY: CI machines are noisy,
 so jobs/sec regressions are reported for humans, never enforced, and only
@@ -68,6 +72,10 @@ REQUIRED: Dict[str, List[str]] = {
                 "islands_hit_target", "wall_s_islands", "speedup_steps",
                 "islands_fewer_steps", "islands_single_compile",
                 "islands_match_single_pop"],
+    "kernels": ["pop_size", "n_nets", "n_units", "n_gids", "reps",
+                "evals_per_sec_fused", "evals_per_sec_unfused",
+                "fused_speedup", "fused_match_ref",
+                "dom_counts_match_ref"],
 }
 TOP_LEVEL = ["bench", "created_unix", "mode", "device", "jax_version",
              "backend"]
@@ -94,6 +102,10 @@ BOOLEANS = [
      "islands(P=1) diverged from the single-population run"),
     ("islands", "islands_single_compile",
      "islands pool recompiled its batched step (or dropped jobs)"),
+    ("kernels", "fused_match_ref",
+     "fused Pallas evaluation diverged from the ref oracles"),
+    ("kernels", "dom_counts_match_ref",
+     "fused domination counts diverged from the domination matrix"),
 ]
 
 # (section, throughput key, shape keys that must match to compare)
@@ -105,6 +117,10 @@ THROUGHPUT = [
     ("autoscale", "jobs_per_sec",
      ["n_jobs", "n_slots_initial", "max_slots", "pop_size", "budget_gens",
       "gens_per_step"]),
+    ("kernels", "evals_per_sec_fused",
+     ["pop_size", "n_nets", "n_units", "n_gids", "reps"]),
+    ("kernels", "evals_per_sec_unfused",
+     ["pop_size", "n_nets", "n_units", "n_gids", "reps"]),
 ]
 SLOWDOWN_WARN = 0.8        # warn when new < 80% of baseline
 

@@ -5,6 +5,15 @@ per-(arch x shape x mesh) roofline terms, flags the dominant bottleneck, and
 nominates the three hillclimb cells: worst roofline fraction, most
 collective-bound, and most representative of the paper's technique (the
 expert-placement MoE cell).
+
+`--kernels` switches to the evaluation-pipeline roofline: an analytic
+fused-vs-unfused bytes/flops model of the placement evaluation at the
+workload shape recorded in the bench JSON's `kernels` section (achieved
+evals/sec vs the memory- and compute-bound peaks).  The unfused path pays
+for materialising the gathered endpoint and unit-coordinate tensors in
+HBM (written by the gather, read back by the reduction); the fused kernel
+keeps those gathers in VMEM, which is the entire bytes-side argument for
+fusing the pipeline.
 """
 from __future__ import annotations
 
@@ -80,6 +89,46 @@ def nominate(rows: List[Dict]) -> None:
               "(expert placement == hard-block placement)")
 
 
+def kernel_roofline(bench_path: str = "BENCH_placement.json") -> None:
+    """Analytic fused-vs-unfused roofline for the evaluation pipeline.
+
+    Shape comes from the bench JSON's `kernels` section; bytes/flops are
+    derived, not measured, so this runs anywhere (no jax import).
+    """
+    with open(bench_path) as f:
+        report = json.load(f)
+    k = report.get("kernels")
+    if not k:
+        print(f"# {bench_path} has no kernels section; re-run "
+              "PYTHONPATH=src python -m benchmarks.bench_service first")
+        return
+    p, n, u, g = (k["pop_size"], k["n_nets"], k["n_units"], k["n_gids"])
+    b = g // u                                      # blocks per unit
+    f4 = 4                                          # f32/int32 bytes
+    # both paths read the same operands once and write two scalars/row
+    base = f4 * (2 * p * g + 3 * n + u * b + 2 * p)
+    # unfused additionally materialises the gathered endpoint tensors
+    # (x1,y1,x2,y2: [P,N] each) and unit tensors (ux,uy: [P,U,B] each),
+    # each written by the gather then read back by the reduction
+    extra = f4 * 2 * (4 * p * n + 2 * p * u * b)
+    flops = p * (9 * n + 6 * u * b)                 # Eq.1 + Eq.2 arithmetic
+    print("path,bytes,flops,intensity_f_per_b,mem_bound_s,compute_bound_s,"
+          "peak_evals_per_sec,achieved_evals_per_sec,fraction_of_peak")
+    for name, nbytes, achieved in (
+            ("fused", base, k.get("evals_per_sec_fused")),
+            ("unfused", base + extra, k.get("evals_per_sec_unfused"))):
+        mem_s = nbytes / HBM_BW
+        cmp_s = flops / PEAK_FLOPS
+        peak = p / max(mem_s, cmp_s)
+        frac = (achieved / peak) if achieved else 0.0
+        print(f"{name},{nbytes},{flops},{flops / nbytes:.3f},"
+              f"{mem_s:.3e},{cmp_s:.3e},{peak:.3e},"
+              f"{achieved or ''},{frac:.2e}")
+    print(f"# fused moves {base / (base + extra):.1%} of the unfused HBM "
+          f"bytes; intensity gain {(base + extra) / base:.2f}x at equal "
+          "flops -- the fused peak is the bound the Pallas kernel chases.")
+
+
 def main(dirname: str = "experiments/dryrun") -> None:
     rows = load(dirname)
     if not rows:
@@ -95,4 +144,12 @@ def main(dirname: str = "experiments/dryrun") -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
-    main(ap.parse_args().dir)
+    ap.add_argument("--kernels", action="store_true",
+                    help="evaluation-pipeline roofline (fused vs unfused)")
+    ap.add_argument("--bench", default="BENCH_placement.json",
+                    help="bench JSON supplying the kernels workload shape")
+    args = ap.parse_args()
+    if args.kernels:
+        kernel_roofline(args.bench)
+    else:
+        main(args.dir)

@@ -32,6 +32,7 @@ class SAConfig:
     n_steps: int = 20000           # linear schedule horizon
     move_sigma: float = 0.6
     adapt_target: float = 0.3      # adaptive: target acceptance rate
+    fused: bool = False            # route evaluation through ops.fused_eval
 
 
 def _temperature(cfg: SAConfig, k: jnp.ndarray, t_adapt: jnp.ndarray
@@ -50,7 +51,7 @@ def _temperature(cfg: SAConfig, k: jnp.ndarray, t_adapt: jnp.ndarray
 
 def init_state(problem: Problem, key: jax.Array, cfg: SAConfig) -> Dict:
     z = jax.random.normal(key, (problem.continuous_dim,)) * 0.1
-    objs = O.evaluate(problem, G.from_flat(problem, z))
+    objs = O.evaluate(problem, G.from_flat(problem, z), cfg.fused)
     return {"z": z, "fit": O.scalarize(objs), "objs": objs,
             "k": jnp.int32(0), "t_adapt": jnp.asarray(cfg.t0, jnp.float32),
             "acc_ema": jnp.float32(0.5),
@@ -92,7 +93,7 @@ def step_impl(problem: Problem, cfg: SAConfig, state: Dict, key: jax.Array
     k1, k2 = jax.random.split(key)
     t = _temperature(cfg, state["k"], state["t_adapt"])
     z_new = _move(problem, k1, state["z"], cfg.move_sigma)
-    objs_new = O.evaluate(problem, G.from_flat(problem, z_new))
+    objs_new = O.evaluate(problem, G.from_flat(problem, z_new), cfg.fused)
     fit_new = O.scalarize(objs_new)
     delta = fit_new - state["fit"]
     accept = (delta <= 0) | (

@@ -30,6 +30,7 @@ from repro.fpga.netlist import Problem
 class CMAESConfig:
     pop_size: int = 0            # 0 -> 4 + floor(3 ln n)
     sigma0: float = 0.3
+    fused: bool = False          # route evaluation through ops.fused_eval
 
     def lam(self, n: int) -> int:
         return self.pop_size if self.pop_size > 0 else 4 + int(3 * math.log(n))
@@ -86,7 +87,7 @@ def step_impl(problem: Problem, cfg: CMAESConfig, state: Dict, key: jax.Array
     y = z * jnp.sqrt(state["c_diag"])[None, :]
     x = state["mean"][None, :] + state["sigma"] * y
 
-    objs = O.evaluate_flat_population(problem, x)          # [lam, 2]
+    objs = O.evaluate_flat_population(problem, x, cfg.fused)   # [lam, 2]
     fit = O.scalarize(objs)
     order = jnp.argsort(fit)
     y_sel = y[order[:mu]]                                  # [mu, n]

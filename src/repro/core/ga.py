@@ -31,19 +31,20 @@ class GAConfig:
     perm_swaps: int = 2
     perm_swap_prob: float = 0.6
     elite: int = 4
+    fused: bool = False
 
     def as_nsga2(self) -> N.NSGA2Config:
         return N.NSGA2Config(
             pop_size=self.pop_size, crossover_prob=self.crossover_prob,
             sbx_eta=self.sbx_eta, mut_eta=self.mut_eta,
             real_mut_prob=self.real_mut_prob, perm_swaps=self.perm_swaps,
-            perm_swap_prob=self.perm_swap_prob)
+            perm_swap_prob=self.perm_swap_prob, fused=self.fused)
 
 
 def init_state(problem: Problem, key: jax.Array, cfg: GAConfig) -> Dict:
     keys = jax.random.split(key, cfg.pop_size)
     pop = jax.vmap(lambda k: G.random_genotype(k, problem))(keys)
-    objs = O.evaluate_population(problem, pop)
+    objs = O.evaluate_population(problem, pop, cfg.fused)
     return {"pop": pop, "objs": objs}
 
 
@@ -68,7 +69,7 @@ def step_impl(problem: Problem, cfg: GAConfig, state: Dict, key: jax.Array
     children = jax.vmap(
         lambda k, g1, g2: N._vary_one(k, g1, g2, cfg.as_nsga2()))(
         jax.random.split(k3, p), take(pa), take(pb))
-    cobjs = O.evaluate_population(problem, children)
+    cobjs = O.evaluate_population(problem, children, cfg.fused)
 
     # elitist truncation over parents + children by scalar fitness
     allpop = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), pop, children)

@@ -40,15 +40,25 @@ class NSGA2Config:
     perm_swaps: int = 2            # swap mutations per child permutation
     perm_swap_prob: float = 0.6
     reduced: bool = False          # SS IV-B2 mapping-only genotype
+    fused: bool = False            # route evaluation through ops.fused_eval
 
 
 # ------------------------------------------------- non-dominated sorting
 
-def nondominated_rank(objs: jnp.ndarray) -> jnp.ndarray:
-    """[P, M] objectives -> [P] int32 Pareto front index (0 = best)."""
+def nondominated_rank(objs: jnp.ndarray, fused: bool = False) -> jnp.ndarray:
+    """[P, M] objectives -> [P] int32 Pareto front index (0 = best).
+
+    `fused=True` takes the matrix and its column counts from one kernel
+    launch (`ops.fused_domination_counts`); the default branch is the
+    original two-step computation, untouched.
+    """
     p = objs.shape[0]
-    dom = ops.domination_matrix(objs).astype(jnp.int32)     # dom[i,j]: i>j
-    ndom = jnp.sum(dom, axis=0)                              # dominated-by ct
+    if fused:
+        dom_b, ndom = ops.fused_domination_counts(objs)
+        dom = dom_b.astype(jnp.int32)                        # dom[i,j]: i>j
+    else:
+        dom = ops.domination_matrix(objs).astype(jnp.int32)  # dom[i,j]: i>j
+        ndom = jnp.sum(dom, axis=0)                          # dominated-by ct
 
     def body(r, carry):
         rank, nd = carry
@@ -209,15 +219,23 @@ def init_state(problem: Problem, key: jax.Array, cfg: NSGA2Config
     if cfg.reduced:
         pop = jax.vmap(
             lambda k: tuple(G.random_genotype(k, problem)["perm"]))(keys)
-        objs = _eval_reduced(problem, pop)
+        objs = _eval_reduced(problem, pop, cfg.fused)
     else:
         pop = jax.vmap(lambda k: G.random_genotype(k, problem))(keys)
-        objs = O.evaluate_population(problem, pop)
+        objs = O.evaluate_population(problem, pop, cfg.fused)
     return {"pop": pop, "objs": objs}
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _eval_reduced(problem: Problem, perms) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _eval_reduced(problem: Problem, perms, fused: bool = False
+                  ) -> jnp.ndarray:
+    if fused:
+        bx, by = jax.vmap(
+            lambda ps: G.decode_reduced(problem, ps))(perms)
+        s, d = jnp.asarray(problem.net_src), jnp.asarray(problem.net_dst)
+        w = jnp.asarray(problem.net_w)
+        return ops.fused_eval(bx, by, s, d, w, O.unit_index(problem))
+
     def one(ps):
         bx, by = G.decode_reduced(problem, ps)
         wl2, bb = O.objectives_from_coords(problem, bx, by)
@@ -234,7 +252,7 @@ def step_impl(problem: Problem, cfg: NSGA2Config, state, key):
     """
     pop, objs = state["pop"], state["objs"]
     p = cfg.pop_size
-    rank = nondominated_rank(objs)
+    rank = nondominated_rank(objs, cfg.fused)
     crowd = crowding_distance(objs, rank)
     k1, k2, k3 = jax.random.split(key, 3)
     pa = _tournament(k1, rank, crowd, p)
@@ -246,13 +264,13 @@ def step_impl(problem: Problem, cfg: NSGA2Config, state, key):
     vary = _vary_one_reduced if cfg.reduced else _vary_one
     children = jax.vmap(lambda k, g1, g2: vary(k, g1, g2, cfg))(
         jax.random.split(k3, p), take(pa), take(pb))
-    cobjs = (_eval_reduced(problem, children) if cfg.reduced
-             else O.evaluate_population(problem, children))
+    cobjs = (_eval_reduced(problem, children, cfg.fused) if cfg.reduced
+             else O.evaluate_population(problem, children, cfg.fused))
 
     # (mu + lambda) environmental selection on the combined population
     allpop = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), pop, children)
     allobjs = jnp.concatenate([objs, cobjs])
-    arank = nondominated_rank(allobjs)
+    arank = nondominated_rank(allobjs, cfg.fused)
     acrowd = crowding_distance(allobjs, arank)
     order = _lexsort_rank_crowd(arank, acrowd)[:p]
     return {"pop": jax.tree.map(lambda a: a[order], allpop),

@@ -19,12 +19,33 @@ from repro.fpga.netlist import BLOCKS_PER_UNIT, Problem
 from repro.kernels import ops, ref
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def objectives_from_coords(problem: Problem, bx: jnp.ndarray, by: jnp.ndarray
+def unit_index(problem: Problem) -> jnp.ndarray:
+    """[U, B] gid gather table for the fused kernel.
+
+    Coordinates decode in gid order, which is unit-major, so the table is
+    just arange reshaped -- but the fused layout keeps it an explicit
+    gather so padded unit rows can point at the neutral gid 0.
+    """
+    g = problem.n_units * BLOCKS_PER_UNIT
+    return jnp.arange(g, dtype=jnp.int32).reshape(
+        problem.n_units, BLOCKS_PER_UNIT)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def objectives_from_coords(problem: Problem, bx: jnp.ndarray, by: jnp.ndarray,
+                           fused: bool = False
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(wirelength^2, max bbox) from logical block coordinates [G]."""
+    """(wirelength^2, max bbox) from logical block coordinates [..., G].
+
+    `fused=False` (default) is the original two-op path, bit-for-bit;
+    `fused=True` routes through `ops.fused_eval` -- one kernel, no
+    materialised endpoint/unit tensors between the objectives.
+    """
     s, d = jnp.asarray(problem.net_src), jnp.asarray(problem.net_dst)
     w = jnp.asarray(problem.net_w)
+    if fused:
+        res = ops.fused_eval(bx, by, s, d, w, unit_index(problem))
+        return res[..., 0], res[..., 1]
     wl2 = ops.wirelength2(bx[s], by[s], bx[d], by[d], w)
     ux = bx.reshape(problem.n_units, BLOCKS_PER_UNIT)
     uy = by.reshape(problem.n_units, BLOCKS_PER_UNIT)
@@ -32,23 +53,42 @@ def objectives_from_coords(problem: Problem, bx: jnp.ndarray, by: jnp.ndarray
     return wl2, bb
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def evaluate(problem: Problem, g: G.Genotype) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def evaluate(problem: Problem, g: G.Genotype, fused: bool = False
+             ) -> jnp.ndarray:
     """Genotype -> objectives [2] = (wl^2, max bbox)."""
     bx, by = G.decode(problem, g)
-    wl2, bb = objectives_from_coords(problem, bx, by)
+    wl2, bb = objectives_from_coords(problem, bx, by, fused)
     return jnp.stack([wl2, bb])
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def evaluate_population(problem: Problem, pop: G.Genotype) -> jnp.ndarray:
-    """Batched genotypes (leading population axis on every leaf) -> [P, 2]."""
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def evaluate_population(problem: Problem, pop: G.Genotype,
+                        fused: bool = False) -> jnp.ndarray:
+    """Batched genotypes (leading population axis on every leaf) -> [P, 2].
+
+    Fused path: vmap only the decode, then evaluate the whole [P, G]
+    coordinate block in a single `ops.fused_eval` call -- outer vmaps
+    (slots, islands) stack further batch axes onto the same launch.
+    """
+    if fused:
+        bx, by = jax.vmap(lambda g: G.decode(problem, g))(pop)
+        s, d = jnp.asarray(problem.net_src), jnp.asarray(problem.net_dst)
+        w = jnp.asarray(problem.net_w)
+        return ops.fused_eval(bx, by, s, d, w, unit_index(problem))
     return jax.vmap(lambda g: evaluate(problem, g))(pop)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def evaluate_flat_population(problem: Problem, z: jnp.ndarray) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def evaluate_flat_population(problem: Problem, z: jnp.ndarray,
+                             fused: bool = False) -> jnp.ndarray:
     """Continuous-encoded population [P, D] -> [P, 2] (CMA-ES / SA path)."""
+    if fused:
+        bx, by = jax.vmap(
+            lambda zz: G.decode(problem, G.from_flat(problem, zz)))(z)
+        s, d = jnp.asarray(problem.net_src), jnp.asarray(problem.net_dst)
+        w = jnp.asarray(problem.net_w)
+        return ops.fused_eval(bx, by, s, d, w, unit_index(problem))
     return jax.vmap(lambda zz: evaluate(problem, G.from_flat(problem, zz)))(z)
 
 

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import _padding as P
+
 BP, BU = 8, 128
 NEG = -3.4e38
 
@@ -44,14 +46,11 @@ def maxbbox_pallas(ux: jnp.ndarray, uy: jnp.ndarray,
     # lay out as [P, B, U]; replicate-pad blocks to a sublane multiple
     ux = jnp.swapaxes(ux, 1, 2)
     uy = jnp.swapaxes(uy, 1, 2)
-    bb = -b % 8
-    pu = -u % BU
-    pp = -p % BP
-
-    def pad(a):
-        return jnp.pad(a, ((0, pp), (0, bb), (0, pu)), mode="edge")
-
-    ux, uy = pad(ux), pad(uy)
+    ux, uy = P.pad_unit_blocks(ux, uy, 8, BU)
+    # edge-pad the population rows too: replicated rows are sliced off
+    ux = P.pad_multiple(ux, 0, BP, mode="edge")
+    uy = P.pad_multiple(uy, 0, BP, mode="edge")
+    pp, pu, bb = ux.shape[0] - p, ux.shape[2] - u, ux.shape[1] - b
     grid = ((p + pp) // BP, (u + pu) // BU)
     spec = pl.BlockSpec((BP, b + bb, BU), lambda i, j: (i, 0, j))
     out = pl.pallas_call(

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import _padding as P
+
 BI, BJ = 128, 128
 
 
@@ -31,15 +33,13 @@ def domination_pallas(objs: jnp.ndarray, interpret: bool = False
                       ) -> jnp.ndarray:
     """objs: [P, 2] fp32 -> int8 [P, P]; out[i,j]=1 iff i dominates j."""
     p = objs.shape[0]
-    pp = -p % BI
-    # pad with +inf so padded rows dominate nothing; padded cols are sliced off
-    o = jnp.pad(objs.astype(jnp.float32), ((0, pp), (0, 0)),
-                constant_values=jnp.inf)
+    # +inf rows dominate nothing; padded cols are sliced off
+    o = P.pad_objs_inf(objs, BI)
     o0r = o[:, 0:1]                       # [P, 1]
     o1r = o[:, 1:2]
     o0c = o[:, 0].reshape(1, -1)          # [1, P]
     o1c = o[:, 1].reshape(1, -1)
-    n = p + pp
+    n = o.shape[0]
     grid = (n // BI, n // BJ)
     out = pl.pallas_call(
         _kernel,

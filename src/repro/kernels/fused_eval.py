@@ -1,0 +1,181 @@
+"""Pallas TPU kernel: fused placement evaluation for the full service batch.
+
+The separate `wirelength` / `bbox` kernels each re-read the decoded
+coordinates from HBM after the host has materialised per-net endpoint
+arrays ([P, N] x 4) and per-unit coordinate tensors ([P, B, U] x 2).  For
+the stacked (slots x islands x pop) batch the service evaluates every
+step, those gathers dominate the memory traffic: ~6x the coordinate bytes
+move through HBM before a single flop of Eq. 1 / Eq. 2 runs.
+
+This kernel keeps one coordinate row-block resident in VMEM and performs
+the gathers *inside* the grid step:
+
+    coords cx, cy : [P, G]   (population x gids, decode order)
+    nets src, dst : [N] int32 gather indices into G, weights w : [N]
+    units uidx    : [U, B] int32 gather table (block b of unit u -> gid)
+
+    grid (i, j) = (population tiles, max(net tiles, unit tiles))
+      step: wl[i] += sum_n ((|x[s]-x[d]| + |y[s]-y[d]|) * w)^2   (net tile j)
+            bb[i]  = max(bb[i], max_u (max-min)x + (max-min)y)   (unit tile j)
+
+The j axis is innermost, so both (BP,) output tiles are revisited on
+consecutive grid steps (TPU sequential-grid accumulation guarantee); step
+j == 0 initialises wl to 0 and bb to -inf.  Net and unit tile counts are
+padded up to a *shared* j extent with neutral elements (see
+`kernels._padding`): surplus net tiles carry w == 0, surplus unit rows
+gather the degenerate gid-0 unit whose bbox is exactly 0.
+
+A second kernel fuses the NSGA-II domination matrix with its column
+reduction (dominated-by counts), saving the [P, P] int32 round-trip that
+`nondominated_rank` otherwise pays before its peeling loop.
+
+Like every kernel here, `ops.py` dispatches to the `ref.py` oracle off-TPU;
+interpret mode executes these bodies on CPU for the differential sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import _padding as P
+
+BP = 8          # population sublane tile
+BN = 512        # nets per grid step (lane dim, 4x128)
+BU = 128        # units per grid step (lane dim)
+NEG = -3.4e38
+
+
+def _eval_kernel(cx, cy, src, dst, w, uidx, wl_ref, bb_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        wl_ref[...] = jnp.zeros_like(wl_ref)
+        bb_ref[...] = jnp.full_like(bb_ref, NEG)
+
+    x = cx[...].astype(jnp.float32)                  # [BP, G]
+    y = cy[...].astype(jnp.float32)
+
+    # Eq. 1 partial: gather this tile's net endpoints from the resident row
+    s, d = src[0], dst[0]                            # (BN,) int32
+    dl = (jnp.abs(jnp.take(x, s, axis=1) - jnp.take(x, d, axis=1))
+          + jnp.abs(jnp.take(y, s, axis=1) - jnp.take(y, d, axis=1)))
+    dl = dl * w[0].astype(jnp.float32)               # padded nets: w == 0
+    wl_ref[...] += jnp.sum(dl * dl, axis=1)
+
+    # Eq. 2 partial: gather this tile's unit blocks, bbox, max-accumulate
+    u = uidx[...]                                    # (BU, Bp) int32
+    gx = jnp.take(x, u.reshape(-1), axis=1).reshape(x.shape[0], *u.shape)
+    gy = jnp.take(y, u.reshape(-1), axis=1).reshape(y.shape[0], *u.shape)
+    wd = jnp.max(gx, axis=2) - jnp.min(gx, axis=2)   # [BP, BU]
+    ht = jnp.max(gy, axis=2) - jnp.min(gy, axis=2)
+    bb_ref[...] = jnp.maximum(bb_ref[...], jnp.max(wd + ht, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_eval_pallas(cx: jnp.ndarray, cy: jnp.ndarray, src: jnp.ndarray,
+                      dst: jnp.ndarray, w: jnp.ndarray, uidx: jnp.ndarray,
+                      interpret: bool = False) -> jnp.ndarray:
+    """cx, cy: [..., G]; src/dst/w: [N]; uidx: [U, B] -> [..., 2] fp32.
+
+    Column 0 is wirelength^2 (Eq. 1), column 1 max bbox (Eq. 2).  Leading
+    batch axes (slots x islands x pop) are flattened into one population
+    axis -- the whole service batch is a single grid.
+    """
+    batch = cx.shape[:-1]
+    g = cx.shape[-1]
+    cx = cx.reshape(-1, g)
+    cy = cy.reshape(-1, g)
+    p = cx.shape[0]
+
+    # shared j extent: enough tiles for both the net and the unit walk
+    n_tiles = max(-(-src.shape[-1] // BN), -(-uidx.shape[0] // BU))
+    src, dst, w = P.pad_net_indices(src, dst, w, BN, n_tiles)
+    uidx = P.pad_unit_index(uidx, BU, bb=8, n_tiles=n_tiles)
+    cx = P.pad_pop(P.pad_multiple(cx, -1, 128), BP)
+    cy = P.pad_pop(P.pad_multiple(cy, -1, 128), BP)
+    pp, gp = cx.shape
+    bp_u = uidx.shape[1]
+
+    grid = (pp // BP, n_tiles)
+    out_spec = pl.BlockSpec((BP,), lambda i, j: (i,))
+    wl, bb = pl.pallas_call(
+        _eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BP, gp), lambda i, j: (i, 0)),     # cx
+            pl.BlockSpec((BP, gp), lambda i, j: (i, 0)),     # cy
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),      # src
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),      # dst
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),      # w
+            pl.BlockSpec((BU, bp_u), lambda i, j: (j, 0)),   # uidx
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((pp,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(cx, cy, src.reshape(1, -1).astype(jnp.int32),
+      dst.reshape(1, -1).astype(jnp.int32),
+      w.reshape(1, -1), uidx.astype(jnp.int32))
+    return jnp.stack([wl[:p], bb[:p]], axis=-1).reshape(*batch, 2)
+
+
+# --------------------------------------------- fused domination + counts
+
+BI, BJ = 128, 128
+
+
+def _dom_kernel(a0, a1, b0, b1, dom_ref, cnt_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    ra0, ra1 = a0[...], a1[...]          # (BI, 1)  rows: candidate i
+    cb0, cb1 = b0[...], b1[...]          # (1, BJ)  cols: candidate j
+    le = (ra0 <= cb0) & (ra1 <= cb1)
+    lt = (ra0 < cb0) | (ra1 < cb1)
+    d = le & lt
+    dom_ref[...] = d.astype(jnp.int8)
+    cnt_ref[...] += jnp.sum(d.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def domination_counts_pallas(objs: jnp.ndarray, interpret: bool = False
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """objs: [P, 2] -> (dom int8 [P, P], dominated-by counts int32 [P]).
+
+    Same tiling as `domination.domination_pallas`, but the row axis i is
+    the *inner* grid dim so each (BJ,) count tile is revisited on
+    consecutive steps and the column sum never leaves VMEM.
+    """
+    p = objs.shape[0]
+    o = P.pad_objs_inf(objs, BI)
+    n = o.shape[0]
+    o0r, o1r = o[:, 0:1], o[:, 1:2]
+    o0c, o1c = o[:, 0].reshape(1, -1), o[:, 1].reshape(1, -1)
+    grid = (n // BJ, n // BI)            # (j cols outer, i rows inner)
+    dom, cnt = pl.pallas_call(
+        _dom_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BI, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((BI, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((1, BJ), lambda j, i: (0, j)),
+            pl.BlockSpec((1, BJ), lambda j, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BI, BJ), lambda j, i: (i, j)),
+            pl.BlockSpec((BJ,), lambda j, i: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.int8),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(o0r, o1r, o0c, o1c)
+    return dom[:p, :p], cnt[:p]

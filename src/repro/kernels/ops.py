@@ -13,17 +13,23 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as _np
 
 from repro.kernels import bbox as _bbox
 from repro.kernels import domination as _dom
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_eval as _fe
 from repro.kernels import ref as _ref
 from repro.kernels import wirelength as _wl
 from repro.kernels import xla_flash as _xf
+from repro.kernels._padding import (  # noqa: F401  (re-exported contracts)
+    pad_multiple, pad_net_endpoints, pad_net_indices, pad_objs_inf,
+    pad_pop, pad_unit_blocks, pad_unit_index,
+)
 
 
 def _mode() -> str:
@@ -64,6 +70,55 @@ def domination_matrix(objs: jnp.ndarray) -> jnp.ndarray:
         return _ref.domination_ref(objs)
     return _dom.domination_pallas(
         objs, interpret=(m == "interpret")).astype(bool)
+
+
+def fused_eval(bx, by, src, dst, w, uidx) -> jnp.ndarray:
+    """Fused Eq. 1 + Eq. 2 over decoded coordinates.
+
+    bx, by: [..., G] (arbitrary leading batch: slots x islands x pop);
+    src/dst/w: [N] nets; uidx: [U, B] unit gather table.  Returns
+    [..., 2] fp32 = (wirelength^2, max bbox).  One kernel launch for the
+    whole stacked service batch -- endpoint/unit tensors never hit HBM.
+    """
+    m = _mode()
+    if m == "ref":
+        # decode order is unit-major, so `core.objectives.unit_index` is
+        # the identity table; gathering by it selects exactly the reshape
+        # elements, so the reshape is bitwise the gather -- take the free
+        # one on the oracle path (concrete tables only: a traced uidx
+        # falls through to the gather).
+        try:
+            ident = _np.array_equal(
+                _np.asarray(uidx),
+                _np.arange(uidx.size).reshape(uidx.shape))
+        except jax.errors.TracerArrayConversionError:
+            ident = False
+        if ident:
+            u, b = uidx.shape
+            ux = bx.reshape(*bx.shape[:-1], u, b)
+            uy = by.reshape(*by.shape[:-1], u, b)
+            wl2 = _ref.wirelength2_ref(bx[..., src], by[..., src],
+                                       bx[..., dst], by[..., dst], w)
+            return jnp.stack([wl2, _ref.maxbbox_ref(ux, uy)], axis=-1)
+        return _ref.fused_eval_ref(bx, by, src, dst, w, uidx)
+    return _fe.fused_eval_pallas(bx, by, src, dst, w, uidx,
+                                 interpret=(m == "interpret"))
+
+
+def fused_domination_counts(objs: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[P, M] objectives -> (bool dom [P, P], int32 dominated-by [P]).
+
+    Fuses the NSGA-II domination matrix with its column reduction so the
+    counts never round-trip the [P, P] matrix through HBM.
+    """
+    m = _mode()
+    if m == "ref" or objs.shape[-1] != 2:
+        dom = _ref.domination_ref(objs)
+        return dom, jnp.sum(dom.astype(jnp.int32), axis=0)
+    dom, cnt = _fe.domination_counts_pallas(
+        objs, interpret=(m == "interpret"))
+    return dom.astype(bool), cnt
 
 
 # ------------------------------------------------------------- attention

@@ -42,6 +42,23 @@ def maxbbox_ref(ux: jnp.ndarray, uy: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(w + h, axis=-1)
 
 
+def fused_eval_ref(bx: jnp.ndarray, by: jnp.ndarray, src: jnp.ndarray,
+                   dst: jnp.ndarray, w: jnp.ndarray, uidx: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Oracle for the fused evaluation kernel.
+
+    bx, by: [..., G] decoded block coordinates; src/dst/w: [N] nets; uidx:
+    [U, B] unit gather table.  Returns [..., 2] fp32 = (wl^2, max bbox).
+    Deliberately composed from the per-objective oracles so the fused path
+    inherits their (tested) semantics exactly -- on CPU, `ops.fused_eval`
+    dispatching here is arithmetically identical to the unfused dispatch.
+    """
+    wl2 = wirelength2_ref(bx[..., src], by[..., src],
+                          bx[..., dst], by[..., dst], w)
+    bb = maxbbox_ref(bx[..., uidx], by[..., uidx])
+    return jnp.stack([wl2, bb], axis=-1)
+
+
 def domination_ref(objs: jnp.ndarray) -> jnp.ndarray:
     """Pareto domination matrix for minimisation.
 

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import _padding as P
+
 BP, BN = 8, 512
 
 
@@ -41,14 +43,9 @@ def wirelength2_pallas(x1: jnp.ndarray, y1: jnp.ndarray, x2: jnp.ndarray,
                        interpret: bool = False) -> jnp.ndarray:
     """x*, y*, w: [P, N] -> [P] fp32.  Pads internally; w==0 on padding."""
     p, n = x1.shape
-    pp = -p % BP
-    pn = -n % BN
-
-    def pad(a):
-        return jnp.pad(a, ((0, pp), (0, pn)))
-
-    x1, y1, x2, y2 = pad(x1), pad(y1), pad(x2), pad(y2)
-    w = pad(w)                       # zero weight => padded nets contribute 0
+    x1, y1, x2, y2, w = P.pad_net_endpoints(x1, y1, x2, y2, w, BN)
+    x1, y1, x2, y2, w = (P.pad_pop(a, BP) for a in (x1, y1, x2, y2, w))
+    pp, pn = x1.shape[0] - p, x1.shape[1] - n
     grid = ((p + pp) // BP, (n + pn) // BN)
     spec = pl.BlockSpec((BP, BN), lambda i, j: (i, j))
     out = pl.pallas_call(

@@ -49,11 +49,12 @@ def placement_main(args) -> None:
                                                make_job_specs)
 
     prob = netlist.make_problem(device.get_device(args.device))
-    base = nsga2.NSGA2Config(pop_size=args.pop)
+    base = nsga2.NSGA2Config(pop_size=args.pop, fused=args.fused)
     svc = PlacementService(prob, base, n_slots=args.slots,
                            gens_per_step=args.gens_per_step,
                            islands=_island_config(args))
-    specs = make_job_specs(args.requests, args.pop, args.gens)
+    specs = make_job_specs(args.requests, args.pop, args.gens,
+                           fused=args.fused)
 
     if args.warm_from:
         import jax
@@ -157,13 +158,15 @@ def control_plane_main(args) -> None:
         print(f"  {tag}: {len(jids)} jobs in {dt:.2f}s")
         return done
 
-    specs = make_job_specs(args.requests, args.pop, args.gens)
+    specs = make_job_specs(args.requests, args.pop, args.gens,
+                           fused=args.fused)
     if args.policy == "deadline":
         # the last-submitted job is the most urgent; EDF picks which POOL
         # steps, so the urgent job gets its own pool (half the pop size)
         # and is served ahead of the earlier-submitted bulk pool
         print("wave 1 (deadline policy: last job has the tight deadline)")
-        urgent_cfg = nsga2.NSGA2Config(pop_size=max(2, args.pop // 2))
+        urgent_cfg = nsga2.NSGA2Config(pop_size=max(2, args.pop // 2),
+                                       fused=args.fused)
         for s in specs:
             sch.submit(args.device, s["cfg"], seed=s["seed"],
                        budget=s["budget"], deadline=1e9, islands=icfg)
@@ -213,6 +216,9 @@ def main():
     ap.add_argument("--gens", type=int, default=64,
                     help="generation budget per placement job")
     ap.add_argument("--gens-per-step", type=int, default=4)
+    ap.add_argument("--fused", action="store_true",
+                    help="evaluate through the fused Pallas pipeline "
+                         "(kernels.fused_eval); static pool identity")
     ap.add_argument("--islands", type=int, default=1, metavar="N",
                     help="island sub-populations per slot (core.islands); "
                          "1 = single-population pools")

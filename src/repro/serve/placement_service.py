@@ -25,10 +25,14 @@ recompiles -- the TPU-friendly serving discipline, now for placement
 traffic.  Vacant slots keep evolving whatever state they hold; their work
 is masked out of accounting and their results are never read.
 
-Static config fields (pop_size, perm_swaps, reduced, ...) are fixed per
-pool at construction: they are baked into the compiled step.  Jobs whose
-config disagrees on those belong in a different pool --
+Static config fields (pop_size, perm_swaps, reduced, fused, ...) are
+fixed per pool at construction: they are baked into the compiled step.
+Jobs whose config disagrees on those belong in a different pool --
 `serve.scheduler.PlacementScheduler` routes mixed traffic across pools.
+`fused=True` configs evaluate the pool's whole stacked (slots x islands x
+pop) batch through the fused Pallas pipeline (`kernels.fused_eval`): the
+slot/island vmaps stack batch axes onto ONE kernel launch instead of
+materialising per-net endpoint and per-unit coordinate tensors per slot.
 
 Warm starts: `submit(init_state=...)` seeds a job from a genotype (e.g.
 `core.transfer.migrate`'s projection of a sibling-device champion) via a
@@ -64,18 +68,23 @@ from repro.fpga.netlist import Problem
 
 
 def make_job_specs(n: int, pop_size: int, budget: int, seed: int = 0,
-                   eta_range=(5.0, 25.0), mut_range=(0.05, 0.3)
-                   ) -> List[Dict]:
+                   eta_range=(5.0, 25.0), mut_range=(0.05, 0.3),
+                   fused: bool = False) -> List[Dict]:
     """Synthetic placement workload: n NSGA-II jobs with jittered float
     hyperparameters (shared by the CLI demo, the example, and the bench,
-    so they all exercise the same traffic shape)."""
+    so they all exercise the same traffic shape).
+
+    `fused=True` routes every job's evaluation through the fused Pallas
+    pipeline (`kernels.fused_eval`); it is a static config field, so fused
+    and unfused jobs belong to different pools."""
     from repro.core import nsga2
     rng = np.random.default_rng(seed)
     return [dict(seed=seed * 10_000 + i, budget=budget,
                  cfg=nsga2.NSGA2Config(
                      pop_size=pop_size,
                      sbx_eta=float(rng.uniform(*eta_range)),
-                     real_mut_prob=float(rng.uniform(*mut_range))))
+                     real_mut_prob=float(rng.uniform(*mut_range)),
+                     fused=fused))
             for i in range(n)]
 
 

@@ -1,0 +1,80 @@
+"""Shared shape/dtype sweep machinery for the differential kernel tests.
+
+Every Pallas kernel here is validated the same way: synthesise inputs for
+a grid of shapes chosen to cross the TPU tile boundaries (8-sublane
+population tiles, 128/512-lane net and unit tiles), run the kernel in
+interpret mode, and compare against the `ref.py` oracle.  This module
+centralises the shape grids and input synthesis so `test_fused_eval.py`
+and any future kernel test sweep the same contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Population sizes crossing the 8-sublane tile edge (7/8/9), the 128-lane
+# domination tile edge (127/128/129 via the dom sweep), and a non-trivial
+# interior point.
+POP_SIZES = (1, 7, 8, 9, 13)
+
+# (gids, nets, units, blocks) crossing the BN=512 net tile edge, the
+# BU=128 unit tile edge, and odd extents forcing padding on every axis.
+# units * blocks <= gids is NOT required: uidx entries just index gids.
+EVAL_SHAPES = (
+    (37, 11, 5, 7),        # tiny, everything padded
+    (96, 511, 3, 28),      # one net short of a full tile
+    (96, 512, 3, 28),      # exactly one net tile
+    (96, 513, 3, 28),      # one net over
+    (640, 40, 127, 5),     # one unit short of a tile
+    (640, 40, 128, 5),     # exactly one unit tile
+    (640, 40, 129, 5),     # one unit over
+    (3640, 999, 130, 28),  # realistic decode extents, both axes ragged
+)
+
+DOM_SIZES = (3, 64, 127, 128, 129, 200)
+
+DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+class EvalCase(NamedTuple):
+    cx: jnp.ndarray     # [P, G]
+    cy: jnp.ndarray
+    src: jnp.ndarray    # [N] int32
+    dst: jnp.ndarray
+    w: jnp.ndarray      # [N]
+    uidx: jnp.ndarray   # [U, B] int32
+
+
+def make_eval_case(p: int, g: int, n: int, u: int, b: int,
+                   dtype=jnp.float32, seed: int = 0) -> EvalCase:
+    """Random fused-eval inputs at the given extents."""
+    ks = jax.random.split(jax.random.PRNGKey(seed * 7919 + p * 131 + n), 6)
+    cx = (jax.random.normal(ks[0], (p, g), jnp.float32) * 50).astype(dtype)
+    cy = (jax.random.normal(ks[1], (p, g), jnp.float32) * 50).astype(dtype)
+    src = jax.random.randint(ks[2], (n,), 0, g, jnp.int32)
+    dst = jax.random.randint(ks[3], (n,), 0, g, jnp.int32)
+    w = (jnp.abs(jax.random.normal(ks[4], (n,), jnp.float32)) * 0.1
+         ).astype(dtype)
+    uidx = jax.random.randint(ks[5], (u, b), 0, g, jnp.int32)
+    return EvalCase(cx, cy, src, dst, w, uidx)
+
+
+def make_dom_case(p: int, seed: int = 0) -> jnp.ndarray:
+    """[P, 2] objectives with planted duplicates + exact ties (the
+    strict/non-strict domination edges)."""
+    objs = jax.random.uniform(jax.random.PRNGKey(seed * 31 + p), (p, 2))
+    if p >= 2:
+        objs = objs.at[1].set(objs[0])          # full duplicate row
+    if p >= 4:
+        objs = objs.at[3, 0].set(objs[2, 0])    # tie on one objective only
+    return objs
+
+
+def tol(dtype) -> dict:
+    """assert_allclose kwargs per input dtype (fp32 accumulation in both
+    paths; bf16 inputs lose mantissa before the accumulate)."""
+    if dtype == jnp.bfloat16:
+        return dict(rtol=2e-2, atol=2e-2)
+    return dict(rtol=1e-5, atol=1e-6)

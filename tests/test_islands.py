@@ -260,3 +260,36 @@ def test_mesh_without_islands_axis_rejected(small_problem):
     with pytest.raises(ValueError):
         I.run(small_problem, "nsga2", nsga2.NSGA2Config(pop_size=6), KEY,
               2, islands=IslandConfig(2, 1), mesh=mesh)
+
+
+# ------------------------------------------------- fused-eval regression
+
+def test_islands_fused_matches_unfused(small_problem):
+    """fused=True must not change island trajectories on the CPU dispatch:
+    the stacked (islands x pop) batch evaluates through one fused call but
+    the same oracle arithmetic."""
+    cfg_u = nsga2.NSGA2Config(pop_size=8)
+    cfg_f = nsga2.NSGA2Config(pop_size=8, fused=True)
+    st_u, h_u = evolve.run(small_problem, "nsga2", cfg_u, KEY, 6, islands=P4)
+    st_f, h_f = evolve.run(small_problem, "nsga2", cfg_f, KEY, 6, islands=P4)
+    np.testing.assert_array_equal(np.asarray(h_u), np.asarray(h_f))
+    _assert_leaves(st_u, st_f)
+
+
+def test_islands_pool_fused_matches_unfused(small_problem):
+    """An islands service pool with fused configs harvests the same
+    champions as the unfused pool for the same jobs."""
+
+    def run(fused):
+        cfg = nsga2.NSGA2Config(pop_size=6, fused=fused)
+        svc = PlacementService(small_problem, cfg, n_slots=2,
+                               gens_per_step=2,
+                               islands=IslandConfig(2, 2))
+        done = svc.run_jobs([dict(seed=i, budget=4, cfg=cfg)
+                             for i in range(3)])
+        assert svc.step_compiles == 1
+        return {j.seed: j.best_objs for j in done}
+
+    cold, hot = run(False), run(True)
+    for seed in cold:
+        np.testing.assert_array_equal(cold[seed], hot[seed])

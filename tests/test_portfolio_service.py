@@ -146,3 +146,65 @@ def test_service_cmaes_pool():
     for j in done:
         O.assert_valid(PROB, j.genotype)
     assert svc.step_compiles == 1
+
+
+# ------------------------------------------------- fused-eval regression
+
+def test_fused_flag_is_static_pool_identity():
+    """`fused` is a bool config field -> part of the static key: fused and
+    unfused jobs cannot share a pool."""
+    sk_u, tr_u = hyper.split_config(nsga2.NSGA2Config(pop_size=8))
+    sk_f, tr_f = hyper.split_config(
+        nsga2.NSGA2Config(pop_size=8, fused=True))
+    assert sk_u != sk_f and tr_u == tr_f
+    svc = PlacementService(PROB, nsga2.NSGA2Config(pop_size=8), n_slots=1)
+    with pytest.raises(ValueError):
+        svc.submit(cfg=nsga2.NSGA2Config(pop_size=8, fused=True))
+
+
+def test_portfolio_fused_matches_unfused_bitwise():
+    """On the CPU dispatch both paths run the same ref oracles: the fused
+    portfolio must reproduce the unfused histories and champions exactly."""
+    fused_cfgs = [
+        nsga2.NSGA2Config(pop_size=c.pop_size, sbx_eta=c.sbx_eta,
+                          real_mut_prob=c.real_mut_prob, fused=True)
+        for c in CFGS]
+    keys = jax.random.split(KEY, len(CFGS))
+    res_u = portfolio.run_portfolio(PROB, "nsga2", CFGS, keys=keys, n_gens=5)
+    res_f = portfolio.run_portfolio(PROB, "nsga2", fused_cfgs, keys=keys,
+                                    n_gens=5)
+    np.testing.assert_array_equal(res_u.history, res_f.history)
+    np.testing.assert_array_equal(res_u.best_objs, res_f.best_objs)
+    assert res_u.champion == res_f.champion
+
+
+def test_service_fused_matches_unfused_champions():
+    """Same job stream through a fused and an unfused pool: every job's
+    harvested champion objectives agree."""
+
+    def run(fused):
+        svc = PlacementService(
+            PROB, nsga2.NSGA2Config(pop_size=8, fused=fused),
+            n_slots=2, gens_per_step=2)
+        specs = [dict(seed=i, budget=4,
+                      cfg=nsga2.NSGA2Config(pop_size=8,
+                                            real_mut_prob=0.1 + 0.05 * i,
+                                            fused=fused))
+                 for i in range(4)]
+        done = svc.run_jobs(specs)
+        assert svc.step_compiles == 1
+        return {j.seed: j.best_objs for j in done}
+
+    cold, hot = run(False), run(True)
+    assert cold.keys() == hot.keys()
+    for seed in cold:
+        np.testing.assert_array_equal(cold[seed], hot[seed])
+
+
+def test_service_fused_cmaes_and_sa_pools():
+    """The fused flag rides every algorithm config, not just NSGA-II."""
+    svc = PlacementService(PROB, cmaes.CMAESConfig(pop_size=8, fused=True),
+                           algo="cmaes", n_slots=1, gens_per_step=2)
+    done = svc.run_jobs([dict(seed=0, budget=4)])
+    assert len(done) == 1 and np.isfinite(done[0].best_objs).all()
+    O.assert_valid(PROB, done[0].genotype)
