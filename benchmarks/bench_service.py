@@ -47,6 +47,15 @@ The serving-perf trajectory, one JSON per run.  Four measurements:
     and `islands(P=1)` is bitwise identical to the single-population
     `evolve.run` (`islands_match_single_pop`) -- both hard CI gates.
 
+  * **compile**: cold-start latency vs the persistent compilation cache
+    (`runtime.compile_cache`).  Two fresh subprocesses
+    (`benchmarks.compile_probe`) share one cache directory: the first
+    (cold) populates it, the second (warm) must deserialize instead of
+    recompiling.  `recompiles_warm_zero` (the warm probe performed ZERO
+    real XLA compiles) and `warm_ttfg_5x` (warm time-to-first-generation
+    is >= 5x faster than cold) are hard CI gates; the raw
+    cold/warm ttfg and compile counts are trend keys.
+
   * **kernels**: the fused Pallas evaluation pipeline
     (`kernels.fused_eval`) vs the unfused two-op dispatch at EQUAL
     workload shape: candidate evaluations/sec for both paths (best-of-k
@@ -84,7 +93,12 @@ tooling -- keys are append-only):
            islands_match_single_pop},
   kernels.{pop_size,n_nets,n_units,n_gids,reps,evals_per_sec_fused,
            evals_per_sec_unfused,fused_speedup,fused_match_ref,
-           dom_counts_match_ref}
+           dom_counts_match_ref},
+  compile.{pop_size,n_slots,gens_per_step,budget_gens,grow_to,cache_salt,
+           ttfg_cold_ms,ttfg_warm_ms,ttfg_speedup,compiles_cold,
+           recompiles_cold,compile_secs_cold,compiles_warm,
+           recompiles_warm,cache_hits_warm,compile_secs_warm,
+           recompiles_warm_zero,warm_ttfg_5x}
 """
 from __future__ import annotations
 
@@ -539,7 +553,68 @@ def bench_kernels(prob, pop: int, reps: int = 40, timed_rounds: int = 12
     }
 
 
-def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
+def bench_compile(cache_dir: str = None, pop: int = 16, n_slots: int = 8,
+                  gens_per_step: int = 8, budget: int = 8,
+                  device: str = "xcvu_test", grow_to: int = 16) -> dict:
+    """Cold vs cache-restored cold start, measured in fresh subprocesses.
+
+    In-memory jit caches die with a process, so each leg runs
+    `benchmarks.compile_probe` as its own interpreter against a shared
+    persistent-cache directory: leg 1 (cold) fills it, leg 2 (warm) must
+    answer every compile request from it.  With no `cache_dir` given a
+    fresh temporary directory is used (the committed-baseline mode: the
+    cold leg is deterministically cold); CI's compile-budget job passes
+    its own directory the same way.
+    """
+    import os
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+
+    fresh = cache_dir is None
+    if fresh:
+        cache_dir = tempfile.mkdtemp(prefix="repro-compile-bench-")
+
+    def leg() -> dict:
+        cmd = [sys.executable, "-m", "benchmarks.compile_probe",
+               "--cache-dir", cache_dir, "--pop", str(pop),
+               "--slots", str(n_slots), "--gps", str(gens_per_step),
+               "--budget", str(budget), "--device", device,
+               "--grow-to", str(grow_to)]
+        out = subprocess.run(cmd, check=True, capture_output=True,
+                             text=True, env=dict(os.environ))
+        # last stdout line is the JSON object (jax may log above it)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    try:
+        cold = leg()
+        warm = leg()
+    finally:
+        if fresh:
+            shutil.rmtree(cache_dir, ignore_errors=True)
+    speedup = cold["ttfg_ms"] / max(warm["ttfg_ms"], 1e-9)
+    return {
+        "pop_size": pop, "n_slots": n_slots, "gens_per_step": gens_per_step,
+        "budget_gens": budget, "grow_to": grow_to, "device": device,
+        "cache_salt": cold["cache_salt"],
+        "ttfg_cold_ms": cold["ttfg_ms"],
+        "ttfg_warm_ms": warm["ttfg_ms"],
+        "ttfg_speedup": round(speedup, 2),
+        "compiles_cold": cold["compiles"],
+        "recompiles_cold": cold["recompiles"],
+        "compile_secs_cold": cold["compile_secs"],
+        "compiles_warm": warm["compiles"],
+        "recompiles_warm": warm["recompiles"],
+        "cache_hits_warm": warm["cache_hits"],
+        "compile_secs_warm": warm["compile_secs"],
+        "recompiles_warm_zero": bool(warm["recompiles"] == 0),
+        "warm_ttfg_5x": bool(speedup >= 5.0),
+    }
+
+
+def main(out: str = "BENCH_placement.json", mode: str = "quick",
+         compile_cache_dir: str = None) -> dict:
     """mode: smoke (CI PR gate) < quick (default) < full (paper-scale)."""
     smoke, full = mode == "smoke", mode == "full"
     dev = "xcvu11p" if full else "xcvu_test"
@@ -589,6 +664,10 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
         budget=48 if not full else 96, gens_per_step=2)
     kern = bench_kernels(prob, pop=64 if not full else 256,
                          reps=40 if smoke else 60)
+    # shapes deliberately do NOT scale with mode: the compile bill depends
+    # on the program set, not the budgets, and a fixed shape keeps the
+    # cold/warm numbers comparable across smoke / quick / full reports
+    comp = bench_compile(cache_dir=compile_cache_dir)
     report = {
         "bench": "placement_service",
         "created_unix": int(time.time()),
@@ -605,6 +684,7 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick") -> dict:
         "autoscale": autoscale,
         "islands": isl,
         "kernels": kern,
+        "compile": comp,
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
@@ -620,8 +700,13 @@ if __name__ == "__main__":
                     help="smallest budgets (CI PR gate)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="BENCH_placement.json")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persistent-cache directory for the compile "
+                         "section's probe pair (default: a fresh temp dir, "
+                         "so the cold leg is deterministically cold)")
     args = ap.parse_args()
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
     main(out=args.out,
-         mode="smoke" if args.smoke else ("full" if args.full else "quick"))
+         mode="smoke" if args.smoke else ("full" if args.full else "quick"),
+         compile_cache_dir=args.compile_cache_dir)

@@ -26,7 +26,20 @@ Hard failures (exit 1) -- correctness of the serving contracts:
   * `kernels.fused_match_ref` false (the fused Pallas evaluation body
     diverged from the `ref.py` oracles on the real problem extents) or
     `kernels.dom_counts_match_ref` false (the fused domination counts
-    diverged from the domination matrix).
+    diverged from the domination matrix),
+  * `compile.recompiles_warm_zero` false (a warm start against a
+    populated persistent compilation cache performed a real XLA compile:
+    something stopped persisting or the cache key churned) or
+    `compile.warm_ttfg_5x` false (the cache-restored time to first
+    generation no longer beats a cold start by >= 5x).
+
+Compile-budget mode (CI `compile-budget` job):
+
+    python -m benchmarks.check_bench --compile-budget COLD.json WARM.json
+
+validates a cold/warm `benchmarks.compile_probe` pair directly (no full
+bench report needed): hard-fails when the warm probe recompiled anything
+(`recompiles > 0`) or when its ttfg is not >= 5x better than cold.
 
 Throughput deltas vs `--baseline` are WARN-ONLY: CI machines are noisy,
 so jobs/sec regressions are reported for humans, never enforced, and only
@@ -76,6 +89,12 @@ REQUIRED: Dict[str, List[str]] = {
                 "evals_per_sec_fused", "evals_per_sec_unfused",
                 "fused_speedup", "fused_match_ref",
                 "dom_counts_match_ref"],
+    "compile": ["pop_size", "n_slots", "gens_per_step", "budget_gens",
+                "grow_to", "cache_salt", "ttfg_cold_ms", "ttfg_warm_ms",
+                "ttfg_speedup", "compiles_cold", "recompiles_cold",
+                "compile_secs_cold", "compiles_warm", "recompiles_warm",
+                "cache_hits_warm", "compile_secs_warm",
+                "recompiles_warm_zero", "warm_ttfg_5x"],
 }
 TOP_LEVEL = ["bench", "created_unix", "mode", "device", "jax_version",
              "backend"]
@@ -106,6 +125,12 @@ BOOLEANS = [
      "fused Pallas evaluation diverged from the ref oracles"),
     ("kernels", "dom_counts_match_ref",
      "fused domination counts diverged from the domination matrix"),
+    ("compile", "recompiles_warm_zero",
+     "warm start against a populated persistent cache performed a real "
+     "XLA compile (persistence or cache keying broke)"),
+    ("compile", "warm_ttfg_5x",
+     "cache-restored time-to-first-generation no longer >= 5x faster "
+     "than cold"),
 ]
 
 # (section, throughput key, shape keys that must match to compare)
@@ -179,13 +204,65 @@ def check(report: dict, baseline: dict = None) -> List[str]:
     return errors
 
 
+def check_compile_budget(cold: dict, warm: dict) -> List[str]:
+    """Hard gates on a cold/warm `compile_probe` pair (CI compile budget).
+
+    The warm probe ran against the directory the cold probe populated
+    (same process shape), so every one of its compile requests must be a
+    persistent-cache hit and its time to first generation must be >= 5x
+    better than cold.
+    """
+    errors: List[str] = []
+    for name, p in (("cold", cold), ("warm", warm)):
+        for key in ("ttfg_ms", "compiles", "recompiles", "cache_hits",
+                    "events_seen"):
+            if key not in p:
+                errors.append(f"{name} probe missing key {key!r}")
+    if errors:
+        return errors
+    if cold["events_seen"] == 0 or warm["events_seen"] == 0:
+        errors.append("compile meter saw no events (jax.monitoring keys "
+                      "changed?); the budget cannot be verified")
+        return errors
+    if warm["recompiles"] > 0:
+        errors.append(f"recompiles_warm == {warm['recompiles']} (want 0): "
+                      f"only {warm['cache_hits']}/{warm['compiles']} "
+                      "compile requests were persistent-cache hits")
+    speedup = cold["ttfg_ms"] / max(warm["ttfg_ms"], 1e-9)
+    if speedup < 5.0:
+        errors.append(f"warm ttfg {warm['ttfg_ms']}ms is only {speedup:.2f}x"
+                      f" faster than cold {cold['ttfg_ms']}ms (want >= 5x)")
+    else:
+        print(f"ok: warm ttfg {warm['ttfg_ms']}ms vs cold "
+              f"{cold['ttfg_ms']}ms ({speedup:.2f}x), "
+              f"recompiles_warm == {warm['recompiles']}")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("report", help="fresh BENCH_placement.json to validate")
+    ap.add_argument("report", nargs="?", default=None,
+                    help="fresh BENCH_placement.json to validate")
     ap.add_argument("--baseline", default=None,
                     help="previous BENCH_placement.json for warn-only "
                          "throughput comparison")
+    ap.add_argument("--compile-budget", nargs=2, default=None,
+                    metavar=("COLD", "WARM"),
+                    help="validate a cold/warm compile_probe JSON pair "
+                         "instead of a bench report")
     args = ap.parse_args()
+    if args.compile_budget:
+        with open(args.compile_budget[0]) as f:
+            cold = json.load(f)
+        with open(args.compile_budget[1]) as f:
+            warm = json.load(f)
+        errors = check_compile_budget(cold, warm)
+        for err in errors:
+            print(f"FAIL: {err}")
+        return 1 if errors else 0
+    if args.report is None:
+        ap.error("a bench report (or --compile-budget COLD WARM) is "
+                 "required")
     with open(args.report) as f:
         report = json.load(f)
     baseline = None

@@ -1,0 +1,105 @@
+"""One cold-start measurement in a fresh process -> one JSON line.
+
+    PYTHONPATH=src python -m benchmarks.compile_probe --cache-dir D [...]
+
+The compile bench (`bench_service.bench_compile`) and the CI
+`compile-budget` job both need the SAME measurement twice: "how long does
+a fresh process take to serve its first generation, and how many real XLA
+compiles did that cost?"  Cold vs warm is decided entirely by what is in
+`--cache-dir` when the probe starts -- an empty directory gives the cold
+number, a directory populated by a previous probe (or restored by CI's
+`actions/cache`) gives the cache-restored number.  Running the probe as a
+subprocess is the point: jax's in-memory jit caches die with the process,
+so only the persistent compilation cache can make the second run fast.
+
+The probe builds a smoke-shaped `PlacementService`, runs one job through
+its first batched step, then exercises one `grow()` ladder rung -- the
+full set of programs a restarted serving process replays -- and prints a
+single JSON object:
+
+  {"ttfg_ms": ..., "wall_ms": ..., "compiles": ..., "recompiles": ...,
+   "cache_hits": ..., "cache_misses": ..., "compile_secs": ...,
+   "events_seen": ..., "pop_size": ..., "n_slots": ..., ...}
+
+`recompiles` (real XLA compiles: requests the persistent cache did not
+answer) is the number the CI budget pins at 0 for a warm start.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def probe(cache_dir: str, pop: int, n_slots: int, gens_per_step: int,
+          budget: int, device: str, grow_to: int) -> dict:
+    from repro.runtime import compile_cache
+    compile_cache.enable(cache_dir)
+    m = compile_cache.meter().install()
+
+    import jax
+    from repro.core import nsga2
+    from repro.fpga import device as device_mod
+    from repro.fpga import netlist
+    from repro.serve.placement_service import PlacementService
+
+    t0 = time.perf_counter()
+    prob = netlist.make_problem(device_mod.get_device(device))
+    svc = PlacementService(prob, nsga2.NSGA2Config(pop_size=pop),
+                           n_slots=n_slots, gens_per_step=gens_per_step)
+    svc.submit(seed=0, budget=budget)
+    while svc.active.any():
+        svc.step()
+    ttfg = svc.stats()["time_to_first_gen_ms"]
+    if grow_to > n_slots:
+        # one ladder rung: a restarted autoscaling process replays these
+        # programs too, so the warm budget must cover them
+        svc.grow(grow_to)
+        svc.submit(seed=1, budget=budget)
+        while svc.active.any():
+            svc.step()
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    return {
+        "ttfg_ms": round(float(ttfg), 1),
+        "wall_ms": round(wall_ms, 1),
+        "pop_size": pop, "n_slots": n_slots,
+        "gens_per_step": gens_per_step, "budget_gens": budget,
+        "device": device, "grow_to": grow_to,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "cache_salt": compile_cache.cache_salt(),
+        "cache_dir": cache_dir,
+        **{k: v for k, v in m.stats().items()
+           if k != "persistent_cache_dir"},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-dir", required=True,
+                    help="persistent compilation cache directory (empty = "
+                         "cold measurement, populated = warm)")
+    ap.add_argument("--pop", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--gps", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--device", default="xcvu_test")
+    ap.add_argument("--grow-to", type=int, default=16,
+                    help="grow the pool to this slot count after the first "
+                         "job (0 disables the ladder rung)")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON object to this path")
+    args = ap.parse_args()
+    out = probe(args.cache_dir, args.pop, args.slots, args.gps,
+                args.budget, args.device, args.grow_to)
+    line = json.dumps(out)
+    print(line)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(line + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

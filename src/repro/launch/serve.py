@@ -27,6 +27,14 @@ identical jobs is answered from cache / warm-started), `--policy
 `--islands N [--migrate-every G]` makes every slot run N island
 sub-populations with ring champion migration (`core.islands`) -- per-job
 quality scales with N at the same wallclock step count.
+
+Compile-latency flags (`runtime.compile_cache` / `serve.prewarm`):
+`--compile-cache-dir D` (or the `REPRO_COMPILE_CACHE_DIR` environment
+variable) turns on jax's persistent compilation cache rooted at D, so a
+restarted launcher deserializes its pool programs instead of recompiling;
+`--prewarm` attaches the background AOT compiler to the scheduler --
+store-predicted pools (`--cache-path` traffic) build off-thread before
+their first job, and autoscale ladder sizes pre-compile before `grow()`.
 """
 import argparse
 import os
@@ -117,7 +125,15 @@ def control_plane_main(args) -> None:
     sch = PlacementScheduler(n_slots=args.slots,
                              gens_per_step=args.gens_per_step,
                              policy=args.policy, store=store,
-                             autoscale=args.autoscale)
+                             autoscale=args.autoscale,
+                             prewarm=args.prewarm)
+    if args.prewarm and store is not None:
+        # a persisted store carries its historical signature traffic:
+        # start compiling the predicted working set before the first job
+        keys = sch.prewarm_predicted()
+        if keys:
+            print(f"prewarming {len(keys)} store-predicted pool(s) "
+                  "in the background...")
 
     if args.warm_from:
         # control-plane spelling of --warm-from: converge a champion on
@@ -241,11 +257,26 @@ def main():
                     help="pool stepping policy (serve.policy)")
     ap.add_argument("--autoscale", action="store_true",
                     help="grow pools along the slot ladder on queue depth")
+    ap.add_argument("--compile-cache-dir", default=None, metavar="DIR",
+                    help="enable jax's persistent compilation cache rooted "
+                         "here (also honoured via the "
+                         "REPRO_COMPILE_CACHE_DIR environment variable): a "
+                         "restarted process deserializes its pool programs "
+                         "instead of recompiling")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="background AOT pool compiler (serve.prewarm): "
+                         "store-predicted pools and autoscale ladder sizes "
+                         "compile off the stepping loop")
     args = ap.parse_args()
 
     if args.placement:
+        from repro.runtime import compile_cache
+        enabled = compile_cache.maybe_enable_from_env(args.compile_cache_dir)
+        if enabled:
+            print(f"persistent compilation cache: {enabled} "
+                  f"({compile_cache.cache_salt()})")
         if (args.cache or args.cache_path or args.autoscale
-                or args.policy != "round_robin"):
+                or args.prewarm or args.policy != "round_robin"):
             control_plane_main(args)
         else:
             placement_main(args)

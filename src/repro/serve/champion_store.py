@@ -89,11 +89,28 @@ def _as_host_genotype(g) -> Dict[str, Tuple[np.ndarray, ...]]:
             for tier, leaves in g.items()}
 
 
+@dataclasses.dataclass
+class PoolPrediction:
+    """One row of the store's signature-traffic distribution: enough to
+    rebuild the pool a future job with this signature will route to
+    (`serve.prewarm` compiles it before that job arrives)."""
+
+    signature: str
+    device_name: str
+    algo: str
+    pop_size: Optional[int]
+    count: int                          # submissions seen for the signature
+
+
 class ChampionStore:
     """In-process (JSON-persistable) map: problem signature -> champion."""
 
     def __init__(self, path: Optional[str] = None):
         self._by_sig: Dict[str, ChampionEntry] = {}
+        # signature -> {count, device_name, algo, pop_size}: the traffic
+        # distribution `predicted_keys` mines for AOT pool prewarming;
+        # persisted with the snapshot so predictions survive a restart
+        self._traffic: Dict[str, Dict[str, Any]] = {}
         self.path = path
         self.hits_exact = 0
         self.hits_sibling = 0
@@ -141,6 +158,37 @@ class ChampionStore:
         )
         self.improvements += 1
         return True
+
+    # -------------------------------------------------------- traffic side
+
+    def note_traffic(self, problem: Problem, algo: str = "nsga2",
+                     pop_size: Optional[int] = None) -> None:
+        """Record one submission against the problem's signature (the
+        scheduler calls this on every `submit`); feeds `predicted_keys`."""
+        row = self._traffic.setdefault(problem.signature, {
+            "count": 0, "device_name": problem.device_name,
+            "algo": algo, "pop_size": pop_size})
+        row["count"] += 1
+        # latest spelling wins: traffic can migrate to a new algo/pop
+        row["device_name"] = problem.device_name
+        row["algo"] = algo
+        if pop_size is not None:
+            row["pop_size"] = pop_size
+
+    def predicted_keys(self, top_k: Optional[int] = None
+                       ) -> List[PoolPrediction]:
+        """The signature-traffic distribution, hottest first: the pool
+        specs a prewarmer should compile ahead of the next job wave."""
+        rows = sorted(self._traffic.items(),
+                      key=lambda kv: (-kv[1]["count"], kv[0]))
+        if top_k is not None:
+            rows = rows[:top_k]
+        return [PoolPrediction(signature=sig,
+                               device_name=row["device_name"],
+                               algo=row["algo"],
+                               pop_size=row.get("pop_size"),
+                               count=row["count"])
+                for sig, row in rows]
 
     # ----------------------------------------------------------- read side
 
@@ -202,7 +250,11 @@ class ChampionStore:
             raise ValueError("no path: pass save(path) or construct "
                              "ChampionStore(path=...)")
         doc = {"champion_store": 1,
-               "entries": [e.to_json() for e in self._by_sig.values()]}
+               "entries": [e.to_json() for e in self._by_sig.values()],
+               # append-only doc key (old readers ignore it; old files
+               # load fine without it): traffic survives restarts so a
+               # fresh process can prewarm its predicted pools
+               "traffic": self._traffic}
         # write-then-rename: a crash mid-dump must never tear an existing
         # snapshot (readers see the old file or the new one, never half)
         tmp = f"{path}.tmp.{os.getpid()}"
@@ -224,6 +276,12 @@ class ChampionStore:
             if cur is None or e.metric < cur.metric:
                 self._by_sig[e.signature] = e
                 absorbed += 1
+        for sig, row in (doc.get("traffic") or {}).items():
+            cur = self._traffic.get(sig)
+            if cur is None:
+                self._traffic[sig] = dict(row)
+            else:                  # merge: counts add, latest metadata wins
+                cur["count"] += int(row.get("count", 0))
         return absorbed
 
     # --------------------------------------------------------------- stats

@@ -52,8 +52,10 @@ the other islands via migration.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -65,6 +67,7 @@ from repro.core import islands as islands_mod
 from repro.core import objectives as O
 from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
+from repro.runtime import compile_cache
 
 
 def make_job_specs(n: int, pop_size: int, budget: int, seed: int = 0,
@@ -136,6 +139,18 @@ class PlacementService:
         self.key = jax.random.PRNGKey(seed)
         self.total_steps = 0
         self.useful_gens = 0       # active-slot generations actually served
+        # compile observability: the process meter separates *blocking*
+        # compiles (on the thread calling submit/step/grow -- the stepping
+        # loop's latency) from background prewarm compiles
+        # (`prewarm_size`, typically run by `serve.prewarm.Prewarmer`)
+        self._meter = compile_cache.meter().install()
+        self.blocking_compiles = 0
+        self.blocking_compile_secs = 0.0
+        self.prewarm_compiles = 0
+        self.prewarm_compile_secs = 0.0
+        self._prewarmed_sizes: set = set()
+        self._created_at = time.perf_counter()
+        self._first_gen_ms: Optional[float] = None
 
         # per-pool jitted programs; problem/algo/static config (and the
         # island config) are closure constants, so each compiles exactly
@@ -187,8 +202,18 @@ class PlacementService:
         # fill the pool with throwaway states so step() shapes exist from
         # the first call (vacant slots evolve garbage; it is never read)
         k_fill = jax.random.fold_in(self.key, 0x5eed)
-        self.states = self._fill_fn(self._traced_dev(),
-                                    jax.random.split(k_fill, n_slots))
+        with self._blocking():
+            self.states = self._fill_fn(self._traced_dev(),
+                                        jax.random.split(k_fill, n_slots))
+
+    @contextlib.contextmanager
+    def _blocking(self):
+        """Attribute compiles on the calling thread to this pool's
+        blocking counters (the stepping loop's compile latency)."""
+        with self._meter.measure() as m:
+            yield
+        self.blocking_compiles += m.compiles
+        self.blocking_compile_secs += m.secs
 
     # ------------------------------------------------------------- admit
 
@@ -230,15 +255,16 @@ class PlacementService:
                            slot=slot, warm=init_state is not None)
         self.next_jid += 1
         traced_dev = {k: jnp.float32(v) for k, v in traced.items()}
-        if init_state is None:
-            state1 = self._init_fn(traced_dev, jax.random.PRNGKey(seed))
-        else:
-            pop, fresh = warmstart.canonicalize(
-                self.problem, init_state, self._seed_rows)
-            state1 = self._warm_init_fn(
-                traced_dev, jax.tree.map(jnp.asarray, pop),
-                jnp.asarray(fresh), jnp.float32(jitter),
-                jnp.float32(sigma_shrink), jax.random.PRNGKey(seed))
+        with self._blocking():
+            if init_state is None:
+                state1 = self._init_fn(traced_dev, jax.random.PRNGKey(seed))
+            else:
+                pop, fresh = warmstart.canonicalize(
+                    self.problem, init_state, self._seed_rows)
+                state1 = self._warm_init_fn(
+                    traced_dev, jax.tree.map(jnp.asarray, pop),
+                    jnp.asarray(fresh), jnp.float32(jitter),
+                    jnp.float32(sigma_shrink), jax.random.PRNGKey(seed))
         # splice the single job state into the pool at `slot`
         self.states = jax.tree.map(
             lambda pool, one: pool.at[slot].set(one), self.states, state1)
@@ -274,9 +300,12 @@ class PlacementService:
         k_fill = jax.random.fold_in(self.key, 0x5eed + n_slots)
         fill_traced = {k: jnp.full((extra,), v, jnp.float32)
                        for k, v in self._base_traced.items()}
-        fill = self._fill_fn(fill_traced, jax.random.split(k_fill, extra))
-        self.states = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0), self.states, fill)
+        with self._blocking():
+            fill = self._fill_fn(fill_traced,
+                                 jax.random.split(k_fill, extra))
+            self.states = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                self.states, fill)
         self.traced = {
             k: np.concatenate(
                 [v, np.full(extra, self._base_traced[k], np.float32)])
@@ -290,6 +319,50 @@ class PlacementService:
             [self.slot_gens, np.zeros(extra, np.int32)])
         self.n_slots = n_slots
         self.size_history.append(n_slots)
+
+    # ----------------------------------------------------------- prewarm
+
+    def prewarm_size(self, n_slots: int) -> bool:
+        """Ahead-of-time compile the programs a future `grow(n_slots)`
+        needs: the fill at the extra-slot width and the batched step (and
+        its combined-metric epilogue) at the full `n_slots` width.
+
+        Runs the pool's OWN jitted callables on throwaway inputs of the
+        target shapes, so the later `grow()` + `step()` hit the in-memory
+        jit caches and perform zero blocking compiles -- the grow becomes
+        pure host-side state surgery.  Compiles land in the prewarm
+        counters, not the blocking ones; designed to run on a background
+        thread (`serve.prewarm.Prewarmer`) while the pool keeps stepping
+        at its current size (only array *shapes* matter here, so racing a
+        concurrent step is benign).  Returns True when work was done,
+        False for an already-prewarmed or non-growing size.
+        """
+        base, states = self.n_slots, self.states   # snapshot
+        if n_slots <= base or n_slots in self._prewarmed_sizes:
+            return False
+        extra = n_slots - base
+        with self._meter.measure() as m:
+            k_fill = jax.random.fold_in(self.key, 0x9ae + n_slots)
+            fill_traced = {k: jnp.full((extra,), v, jnp.float32)
+                           for k, v in self._base_traced.items()}
+            fill = self._fill_fn(fill_traced,
+                                 jax.random.split(k_fill, extra))
+            probe = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), states, fill)
+            # operands built exactly as step() builds them (jnp.array
+            # copies of numpy mirrors): the per-(dtype, width) host-copy
+            # programs compile here too, not in the stepping loop
+            traced = {k: jnp.array(np.full(n_slots, v, np.float32))
+                      for k, v in self._base_traced.items()}
+            _, best = self._step_fn(traced, probe,
+                                    jnp.array(np.zeros(n_slots, np.uint32)),
+                                    jnp.array(np.zeros(n_slots, np.int32)))
+            # step()'s epilogue ops compile per slot-count too
+            jax.block_until_ready(O.combined_metric(best))
+        self._prewarmed_sizes.add(n_slots)
+        self.prewarm_compiles += m.compiles
+        self.prewarm_compile_secs += m.secs
+        return True
 
     # -------------------------------------------------------------- step
 
@@ -315,14 +388,21 @@ class PlacementService:
         # jnp.array copies: the numpy mirrors are mutated in place below
         # and by submit(), and CPU jax may otherwise alias their buffers
         # while the dispatched step is still consuming them
-        self.states, best = self._step_fn(
-            self._traced_dev(), self.states,
-            jnp.array(self.slot_seed), jnp.array(self.slot_gens))
+        with self._blocking():
+            self.states, best = self._step_fn(
+                self._traced_dev(), self.states,
+                jnp.array(self.slot_seed), jnp.array(self.slot_gens))
         self.total_steps += 1
         self.useful_gens += int(self.active.sum()) * self.gens_per_step
         self.slot_gens += self.gens_per_step
         best = np.asarray(best)
         metric = np.asarray(O.combined_metric(best))
+        if self._first_gen_ms is None:
+            # first generations actually served: the pool's cold-start
+            # latency (construction + first submit + first step, compiles
+            # included) -- the number the compile bench/CI budget watches
+            self._first_gen_ms = (time.perf_counter()
+                                  - self._created_at) * 1e3
         finished = []
         for slot in np.where(self.active)[0]:
             job = self.slot_job[slot]
@@ -388,4 +468,18 @@ class PlacementService:
             "sizes": list(self.size_history),
             "n_islands": self.islands.n_islands,
             "migrate_every": self.islands.migrate_every,
+            # compile observability (process meter + this pool's split of
+            # blocking vs prewarmed compiles; see runtime.compile_cache)
+            "blocking_compiles": self.blocking_compiles,
+            "blocking_compile_secs": round(self.blocking_compile_secs, 3),
+            "prewarm_compiles": self.prewarm_compiles,
+            "prewarm_compile_secs": round(self.prewarm_compile_secs, 3),
+            "prewarmed_sizes": sorted(self._prewarmed_sizes),
+            "time_to_first_gen_ms": (
+                None if self._first_gen_ms is None
+                else round(self._first_gen_ms, 1)),
+            "compiles_total": self._meter.compiles,
+            "recompiles_total": self._meter.recompiles,
+            "compile_secs_total": round(self._meter.compile_secs, 3),
+            "persistent_cache_dir": compile_cache.enabled_dir(),
         }

@@ -49,10 +49,24 @@ from repro.fpga.netlist import Problem
 from repro.serve import policy as P
 from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementJob, PlacementService
+from repro.serve.prewarm import Prewarmer
 
 # (device, algo, static config fields, gens_per_step, island config) --
 # everything that picks a compiled program, so each pool compiles once
 PoolKey = Tuple[str, str, hyper.StaticKey, int, IslandConfig]
+
+
+def _default_cfg(algo: str, pop_size: Optional[int]):
+    """Default config for a store-predicted pool (prediction records the
+    dominant static field, pop_size; float hyperparameters don't matter --
+    they are traced, not part of the compiled-program signature)."""
+    from repro.core import annealing, cmaes, ga, nsga2
+    cls = {"nsga2": nsga2.NSGA2Config, "ga": ga.GAConfig,
+           "cmaes": cmaes.CMAESConfig, "sa": annealing.SAConfig}[algo]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    if pop_size and "pop_size" in fields:
+        return cls(pop_size=int(pop_size))
+    return cls()
 
 
 @dataclasses.dataclass
@@ -69,10 +83,19 @@ class FleetJob:
     result: Optional[PlacementJob] = None
     cached: bool = False           # served straight from the champion store
     warm_from_cache: bool = False  # init_state injected by the store
+    error: Optional[str] = None    # last admission-failure note (re-queued)
+    attempts: int = 0              # failed admission attempts so far
 
     @property
     def done(self) -> bool:
         return self.result is not None and self.result.done
+
+    @property
+    def failed(self) -> bool:
+        """Gave up after repeated admission failures (never silently
+        dropped: the error note says why)."""
+        return self.result is None and self.error is not None \
+            and self.attempts >= PlacementScheduler.ADMIT_RETRIES
 
 
 class PlacementScheduler:
@@ -84,17 +107,29 @@ class PlacementScheduler:
     lets queue depth grow pools along a geometric slot ladder.
     """
 
+    # admission attempts per job before it is surfaced as failed (attempt
+    # 1 = the original; each re-queue carries an error note)
+    ADMIT_RETRIES = 3
+
     def __init__(self, problems: Optional[Dict[str, Problem]] = None,
                  n_slots: int = 4, gens_per_step: int = 4, seed: int = 0,
                  policy="round_robin", store: Optional[ChampionStore] = None,
                  autoscale: bool = False,
                  autoscale_threshold: Optional[int] = None,
-                 max_slots: Optional[int] = None):
+                 max_slots: Optional[int] = None,
+                 prewarm: bool = False,
+                 prewarmer: Optional[Prewarmer] = None):
         self.n_slots, self.gens_per_step = n_slots, gens_per_step
         self.seed = seed
         self.policy = P.get_policy(policy)
         self.store = store
         self.autoscale = autoscale
+        # `prewarm=True` attaches a background AOT compiler
+        # (`serve.prewarm.Prewarmer`): predicted / explicitly requested
+        # pools build off-thread and `grow()` sizes pre-compile, so the
+        # stepping loop stops blocking on XLA
+        self.prewarmer = prewarmer if prewarmer is not None else (
+            Prewarmer() if prewarm else None)
         # default trigger: a full extra wave of jobs waiting behind the pool
         self.autoscale_threshold = (n_slots if autoscale_threshold is None
                                     else autoscale_threshold)
@@ -106,6 +141,7 @@ class PlacementScheduler:
         self._inflight: Dict[Tuple[PoolKey, int], FleetJob] = {}
         self._rotation: List[PoolKey] = []     # stable pool order
         self._cached_done: List[FleetJob] = []  # instant cache hits to drain
+        self._failed: List[FleetJob] = []      # gave up admitting; drained
         self.next_jid = 0
         self.jobs: Dict[int, FleetJob] = {}
 
@@ -127,16 +163,64 @@ class PlacementScheduler:
                 gens_per_step or self.gens_per_step,
                 islands or IslandConfig())
 
-    def _pool(self, key: PoolKey, cfg) -> PlacementService:
-        if key not in self._pools:
-            device_name, algo, _static, gps, icfg = key
-            self._pools[key] = PlacementService(
+    def _builder(self, key: PoolKey, cfg):
+        """The one true pool constructor for a signature: the synchronous
+        path and the background prewarm build share it, which is what
+        makes an adopted pool bitwise identical to a cold one (same
+        constructor arguments, same seed)."""
+        device_name, algo, _static, gps, icfg = key
+
+        def build() -> PlacementService:
+            return PlacementService(
                 self.problem(device_name), cfg, algo=algo,
                 n_slots=self.n_slots, gens_per_step=gps,
                 seed=self.seed, islands=icfg)
+        return build
+
+    def _pool(self, key: PoolKey, cfg) -> PlacementService:
+        if key not in self._pools:
+            svc = (self.prewarmer.take(key)
+                   if self.prewarmer is not None else None)
+            if svc is None:    # not prewarmed (or its build failed): cold
+                svc = self._builder(key, cfg)()
+            self._pools[key] = svc
             self._pending[key] = []
             self._rotation.append(key)
+            if (self.prewarmer is not None and self.autoscale
+                    and 2 * svc.n_slots <= self.max_slots):
+                # pre-compile the next ladder size before the queue backs
+                # up, so an eventual grow() is pure host-side surgery
+                self.prewarmer.prewarm_grow(svc, 2 * svc.n_slots)
         return self._pools[key]
+
+    # ------------------------------------------------------------ prewarm
+
+    def prewarm(self, device: str, cfg, algo: str = "nsga2",
+                gens_per_step: Optional[int] = None,
+                islands: Optional[IslandConfig] = None) -> PoolKey:
+        """Request a background build of the pool for this signature (the
+        pool a later `submit()` with the same arguments would create).
+        No-op without a prewarmer or when the pool already exists."""
+        key = self.pool_key(device, algo, cfg, gens_per_step, islands)
+        if self.prewarmer is not None and key not in self._pools:
+            self.prewarmer.prewarm_pool(key, self._builder(key, cfg))
+        return key
+
+    def prewarm_predicted(self, top_k: int = 4) -> List[PoolKey]:
+        """Prewarm the pools the champion store's signature-traffic
+        distribution predicts: a restarted process starts compiling its
+        historical working set before the first job arrives."""
+        if self.store is None or self.prewarmer is None:
+            return []
+        keys = []
+        for pred in self.store.predicted_keys(top_k):
+            try:
+                cfg = _default_cfg(pred.algo, pred.pop_size)
+            except KeyError:
+                continue                        # unknown algo in old JSON
+            keys.append(self.prewarm(pred.device_name, cfg,
+                                     algo=pred.algo))
+        return keys
 
     # -------------------------------------------------------------- cache
 
@@ -204,9 +288,15 @@ class PlacementScheduler:
                        priority=priority, deadline=deadline)
         self.next_jid += 1
         self.jobs[job.jid] = job
-        if self.store is not None and self._consult_store(
-                job, self.problem(device)):
-            return job.jid                 # served from cache, zero slots
+        if self.store is not None:
+            problem = self.problem(device)
+            # signature-traffic bookkeeping: what `prewarm_predicted`
+            # mines after a restart (persists with the store JSON)
+            self.store.note_traffic(
+                problem, algo=algo,
+                pop_size=getattr(cfg, "pop_size", None))
+            if self._consult_store(job, problem):
+                return job.jid             # served from cache, zero slots
         self._pool(key, cfg)               # create lazily
         self._pending[key].append(job)
         if len(self._pending[key]) == 1:   # a waiting head means pool full
@@ -215,11 +305,33 @@ class PlacementScheduler:
 
     def _admit(self, key: PoolKey) -> None:
         """Drain the pool's FIFO head into free slots: O(jobs admitted),
-        with an O(1) early-out when the pool is already full."""
+        with an O(1) early-out when the pool is already full.
+
+        Resilient to a job whose admission raises (a seed genotype that
+        fails canonicalization, a pool left inconsistent by a failed
+        prewarm, ...): the job is RE-QUEUED at the back with an error note
+        instead of being dropped or wedging the FIFO head, and after
+        `ADMIT_RETRIES` failed attempts it is surfaced as failed via
+        `step()` so `run_all()` still terminates and co-queued jobs keep
+        flowing."""
         pool, queue = self._pools[key], self._pending[key]
-        while queue and not pool.active.all():
+        admissible = len(queue)            # each job gets one try per drain
+        while queue and admissible > 0 and not pool.active.all():
+            admissible -= 1
             job = queue[0]
-            pool_jid = pool.submit(**job.spec)
+            try:
+                pool_jid = pool.submit(**job.spec)
+            except Exception as e:         # noqa: BLE001 -- never drop a job
+                queue.pop(0)
+                job.attempts += 1
+                job.error = (f"admission to pool failed "
+                             f"(attempt {job.attempts}): "
+                             f"{type(e).__name__}: {e}")
+                if job.attempts >= self.ADMIT_RETRIES:
+                    self._failed.append(job)   # drained by step()
+                else:
+                    queue.append(job)          # re-queued, not dropped
+                continue
             if pool_jid is None:           # pool full
                 break
             queue.pop(0)
@@ -238,6 +350,10 @@ class PlacementScheduler:
             pool.grow(2 * old)
             self.autoscale_events.append((self._label(key), old,
                                           pool.n_slots))
+            if (self.prewarmer is not None
+                    and 2 * pool.n_slots <= self.max_slots):
+                # keep one ladder rung ahead of the traffic
+                self.prewarmer.prewarm_grow(pool, 2 * pool.n_slots)
             self._admit(key)               # the new slots fill immediately
 
     # -------------------------------------------------------------- step
@@ -245,7 +361,7 @@ class PlacementScheduler:
     @property
     def busy(self) -> bool:
         return (bool(self._inflight) or bool(self._cached_done)
-                or any(self._pending.values()))
+                or bool(self._failed) or any(self._pending.values()))
 
     def _views(self) -> List[P.PoolView]:
         by_pool: Dict[PoolKey, List[FleetJob]] = {k: [] for k
@@ -268,6 +384,8 @@ class PlacementScheduler:
         step; returns newly finished fleet jobs (instant cache hits are
         drained here too)."""
         finished, self._cached_done = self._cached_done, []
+        finished += self._failed           # surfaced, never silently lost
+        self._failed = []
         for key in self._rotation:
             if self._pending[key]:
                 if self.autoscale:
@@ -314,10 +432,13 @@ class PlacementScheduler:
             "n_pools": len(self._pools),
             "jobs_submitted": self.next_jid,
             "jobs_done": sum(j.done for j in self.jobs.values()),
+            "jobs_failed": sum(j.failed for j in self.jobs.values()),
             "policy": getattr(self.policy, "name", type(self.policy).__name__),
             "autoscale_events": list(self.autoscale_events),
             "pools": pools,
         }
         if self.store is not None:
             out["cache"] = self.store.stats()
+        if self.prewarmer is not None:
+            out["prewarm"] = self.prewarmer.stats()
         return out
