@@ -47,6 +47,14 @@ The serving-perf trajectory, one JSON per run.  Four measurements:
     and `islands(P=1)` is bitwise identical to the single-population
     `evolve.run` (`islands_match_single_pop`) -- both hard CI gates.
 
+  * **frontend**: the asyncio job front-end (`serve.frontend`) under 32
+    concurrent clients: p50/p99 submit->champion latency and jobs/sec
+    (post-compile), with `max_queue < n_clients` so part of the load
+    experiences real backpressure.  `concurrent_match_sequential` (every
+    client's best objectives bitwise-match the same requests hand-pumped
+    through a sequential scheduler) is a hard CI gate: the stepping
+    thread changes latency only, never results.
+
   * **compile**: cold-start latency vs the persistent compilation cache
     (`runtime.compile_cache`).  Two fresh subprocesses
     (`benchmarks.compile_probe`) share one cache directory: the first
@@ -94,6 +102,10 @@ tooling -- keys are append-only):
   kernels.{pop_size,n_nets,n_units,n_gids,reps,evals_per_sec_fused,
            evals_per_sec_unfused,fused_speedup,fused_match_ref,
            dom_counts_match_ref},
+  frontend.{n_clients,n_slots,max_queue,pop_size,budget_gens,
+            gens_per_step,wall_s,jobs_per_sec,submit_to_champion_p50_ms,
+            submit_to_champion_p99_ms,backpressure_waits,step_compiles,
+            concurrent_match_sequential},
   compile.{pop_size,n_slots,gens_per_step,budget_gens,grow_to,cache_salt,
            ttfg_cold_ms,ttfg_warm_ms,ttfg_speedup,compiles_cold,
            recompiles_cold,compile_secs_cold,compiles_warm,
@@ -113,6 +125,7 @@ from benchmarks import common
 from repro.core import evolve, nsga2, cmaes, transfer, portfolio
 from repro.core import objectives as O
 from repro.core.islands import IslandConfig
+from repro.serve.api import JobRequest
 from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementService, make_job_specs
 from repro.serve.scheduler import PlacementScheduler
@@ -198,8 +211,9 @@ def bench_transfer(base_dev: str, dst_dev: str, base_pop: int,
 
     svc = PlacementService(dst_prob, nsga2.NSGA2Config(pop_size=pop),
                            n_slots=2, gens_per_step=gens_per_step)
-    svc.submit(seed=0, budget=budget, target=target)
-    svc.submit(seed=0, budget=budget, target=target, init_state=g_mig)
+    svc.submit_request(JobRequest(seed=0, budget=budget, target=target))
+    svc.submit_request(JobRequest(seed=0, budget=budget, target=target,
+                                  init_state=g_mig))
     done = []
     while svc.active.any():
         done.extend(svc.step())
@@ -231,14 +245,16 @@ def bench_scheduler(devices, pops, jobs_per_pool: int, budget: int,
 
     # warmup wave: every pool compiles its init + step once
     for dev, algo, cfg in combos():
-        sch.submit(dev, cfg, algo=algo, seed=999, budget=gens_per_step)
+        sch.submit_request(JobRequest(device=dev, cfg=cfg, algo=algo,
+                                      seed=999, budget=gens_per_step))
     sch.run_all()
 
     n_jobs = 0
     t0 = time.perf_counter()
     for dev, algo, cfg in combos():
         for s in range(jobs_per_pool):
-            sch.submit(dev, cfg, algo=algo, seed=s, budget=budget)
+            sch.submit_request(JobRequest(device=dev, cfg=cfg,
+                                          algo=algo, seed=s, budget=budget))
             n_jobs += 1
     done = sch.run_all()
     wall = time.perf_counter() - t0
@@ -272,7 +288,8 @@ def bench_cache(base_dev: str, sib_dev: str, pop: int, budget: int,
     sch = PlacementScheduler(n_slots=2, gens_per_step=gens_per_step,
                              store=store)
     cfg = nsga2.NSGA2Config(pop_size=pop)
-    jid_cold = sch.submit(base_dev, cfg, seed=0, budget=budget)
+    jid_cold = sch.submit_request(JobRequest(device=base_dev, cfg=cfg,
+                                             seed=0, budget=budget))
     done = {j.jid: j for j in sch.run_all()}
     champion_metric = done[jid_cold].result.metric
 
@@ -280,8 +297,9 @@ def bench_cache(base_dev: str, sib_dev: str, pop: int, budget: int,
     pools_before = sch.stats()["n_pools"]
     target = champion_metric * 1.001
     t0 = time.perf_counter()
-    jid_hit = sch.submit(base_dev, cfg, seed=1, budget=budget,
-                         target=target)
+    jid_hit = sch.submit_request(JobRequest(device=base_dev, cfg=cfg,
+                                            seed=1, budget=budget,
+                                            target=target))
     done_hit = {j.jid: j for j in sch.run_all()}
     wall_hit = time.perf_counter() - t0
     hit = done_hit[jid_hit]
@@ -298,11 +316,13 @@ def bench_cache(base_dev: str, sib_dev: str, pop: int, budget: int,
     g_mig = store.seed_for(sib_prob, entry)
     sib_target = float(O.combined_metric(O.evaluate(sib_prob, g_mig)))
     cold_sch = PlacementScheduler(n_slots=2, gens_per_step=gens_per_step)
-    jid = cold_sch.submit(sib_dev, cfg, seed=0, budget=budget,
-                          target=sib_target)
+    jid = cold_sch.submit_request(JobRequest(device=sib_dev, cfg=cfg,
+                                             seed=0, budget=budget,
+                                             target=sib_target))
     cold_gens = {j.jid: j for j in cold_sch.run_all()}[jid].result.gens
-    jid = sch.submit(sib_dev, cfg, seed=0, budget=budget,
-                     target=sib_target)
+    jid = sch.submit_request(JobRequest(device=sib_dev, cfg=cfg,
+                                        seed=0, budget=budget,
+                                        target=sib_target))
     warm_job = {j.jid: j for j in sch.run_all()}[jid]
     assert warm_job.warm_from_cache
     warm_gens = warm_job.result.gens
@@ -330,10 +350,12 @@ def bench_policy(dev: str, budget: int, gens_per_step: int,
         sch = PlacementScheduler(n_slots=1, gens_per_step=gens_per_step,
                                  policy=policy)
         for s in range(n_bulk):
-            sch.submit(dev, bulk_cfg, seed=s, budget=budget, deadline=1e9,
-                       priority=0.0)
-        urgent = sch.submit(dev, urgent_cfg, seed=0, budget=budget,
-                            deadline=1.0, priority=10.0)
+            sch.submit_request(JobRequest(device=dev, cfg=bulk_cfg, seed=s,
+                                          budget=budget, deadline=1e9,
+                                          priority=0.0))
+        urgent = sch.submit_request(JobRequest(device=dev, cfg=urgent_cfg,
+                                               seed=0, budget=budget,
+                                               deadline=1.0, priority=10.0))
         order = [j.jid for j in sch.run_all()]
         return order.index(urgent)
 
@@ -360,7 +382,8 @@ def bench_autoscale(dev: str, n_jobs: int, pop: int, budget: int,
                              autoscale=True, autoscale_threshold=2,
                              max_slots=max_slots)
     t0 = time.perf_counter()
-    jids = [sch.submit(dev, cfg, seed=i, budget=budget)
+    jids = [sch.submit_request(JobRequest(device=dev, cfg=cfg, seed=i,
+                                          budget=budget))
             for i in range(n_jobs)]
     done = {j.jid: j for j in sch.run_all()}
     wall = time.perf_counter() - t0
@@ -407,7 +430,8 @@ def _gens_to_target(prob, cfg, islands, seed: int, budget: int,
                     target, gens_per_step: int):
     svc = PlacementService(prob, cfg, n_slots=1,
                            gens_per_step=gens_per_step, islands=islands)
-    svc.submit(seed=seed, budget=budget, target=target)
+    svc.submit_request(JobRequest(seed=seed, budget=budget,
+                                  target=target))
     done = []
     while svc.active.any():
         done.extend(svc.step())
@@ -553,6 +577,80 @@ def bench_kernels(prob, pop: int, reps: int = 40, timed_rounds: int = 12
     }
 
 
+def bench_frontend(dev: str, n_clients: int, n_slots: int, pop: int,
+                   budget: int, gens_per_step: int, max_queue: int) -> dict:
+    """The asyncio front-end under concurrent load (`serve.frontend`).
+
+    `n_clients` concurrent client coroutines each submit a
+    `serve.api.JobRequest` and await its champion; with
+    `max_queue < n_clients` part of the load experiences real
+    backpressure.  Reports p50/p99 submit->champion latency and jobs/sec
+    (post-compile: a warmup job compiles the pool's programs before the
+    timed wave), plus `concurrent_match_sequential` -- every client's
+    best objectives bitwise-match the same request set hand-pumped
+    through a sequential scheduler, the determinism hard gate: the
+    stepping thread and any admission interleaving change latency only,
+    never results.
+    """
+    import asyncio
+
+    from repro.serve.api import JobRequest
+    from repro.serve.frontend import PlacementFrontend
+
+    specs = make_job_specs(n_clients, pop, budget)
+    reqs = [JobRequest(device=dev, cfg=s["cfg"], seed=s["seed"],
+                       budget=s["budget"]) for s in specs]
+
+    # sequential reference: same requests, hand-pumped scheduler
+    seq = PlacementScheduler(n_slots=n_slots, gens_per_step=gens_per_step)
+    jids = [seq.submit_request(r) for r in reqs]
+    by_jid = {j.jid: j for j in seq.run_all()}
+    ref = {r.seed: np.asarray(by_jid[j].result.best_objs)
+           for r, j in zip(reqs, jids)}
+
+    async def run():
+        sched = PlacementScheduler(n_slots=n_slots,
+                                   gens_per_step=gens_per_step)
+        lat: list = []
+
+        async def client(req):
+            t0 = time.perf_counter()
+            handle = await fe.submit(req)
+            pj = await handle.wait()
+            lat.append(time.perf_counter() - t0)
+            return req.seed, np.asarray(pj.best_objs)
+
+        async with PlacementFrontend(sched, max_queue=max_queue) as fe:
+            # warmup: the pool's init/step programs compile here, so the
+            # timed wave measures serving latency, not XLA
+            warm = await fe.submit(JobRequest(
+                device=dev, cfg=specs[0]["cfg"], seed=10_000,
+                budget=gens_per_step))
+            await warm.wait()
+            t0 = time.perf_counter()
+            results = await asyncio.gather(*[client(r) for r in reqs])
+            wall = time.perf_counter() - t0
+            stats = fe.stats()
+        return dict(results), lat, wall, stats
+
+    got, lat, wall, stats = asyncio.run(run())
+    match = all(np.array_equal(ref[s], got[s]) for s in ref)
+    p50, p99 = np.percentile(np.array(lat) * 1e3, [50, 99])
+    (pool_stats,) = stats["fleet"]["pools"].values()
+    return {
+        "n_clients": n_clients, "n_slots": n_slots,
+        "max_queue": max_queue, "pop_size": pop, "budget_gens": budget,
+        "gens_per_step": gens_per_step,
+        "wall_s": round(wall, 4),
+        "jobs_per_sec": round(n_clients / wall, 3),
+        "submit_to_champion_p50_ms": round(float(p50), 2),
+        "submit_to_champion_p99_ms": round(float(p99), 2),
+        "backpressure_waits": stats["backpressure_waits"],
+        "step_compiles": pool_stats["step_compiles"],
+        "concurrent_match_sequential": bool(match),
+    }
+
+
 def bench_compile(cache_dir: str = None, pop: int = 16, n_slots: int = 8,
                   gens_per_step: int = 8, budget: int = 8,
                   device: str = "xcvu_test", grow_to: int = 16) -> dict:
@@ -664,6 +762,12 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick",
         budget=48 if not full else 96, gens_per_step=2)
     kern = bench_kernels(prob, pop=64 if not full else 256,
                          reps=40 if smoke else 60)
+    # 32 concurrent clients in EVERY mode (the serving-contract load the
+    # ROADMAP names); only budgets shrink in smoke
+    fe = bench_frontend(
+        dev, n_clients=32, n_slots=8, pop=16,
+        budget=8 if smoke else (16 if not full else 64),
+        gens_per_step=4, max_queue=16)
     # shapes deliberately do NOT scale with mode: the compile bill depends
     # on the program set, not the budgets, and a fixed shape keeps the
     # cold/warm numbers comparable across smoke / quick / full reports
@@ -684,6 +788,7 @@ def main(out: str = "BENCH_placement.json", mode: str = "quick",
         "autoscale": autoscale,
         "islands": isl,
         "kernels": kern,
+        "frontend": fe,
         "compile": comp,
     }
     with open(out, "w") as f:

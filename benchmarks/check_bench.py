@@ -27,6 +27,10 @@ Hard failures (exit 1) -- correctness of the serving contracts:
     diverged from the `ref.py` oracles on the real problem extents) or
     `kernels.dom_counts_match_ref` false (the fused domination counts
     diverged from the domination matrix),
+  * `frontend.concurrent_match_sequential` false (32 concurrent clients
+    through the async front-end no longer produce bitwise the results of
+    a hand-pumped sequential scheduler -- the stepping thread started
+    changing answers, not just latency),
   * `compile.recompiles_warm_zero` false (a warm start against a
     populated persistent compilation cache performed a real XLA compile:
     something stopped persisting or the cache key churned) or
@@ -89,6 +93,11 @@ REQUIRED: Dict[str, List[str]] = {
                 "evals_per_sec_fused", "evals_per_sec_unfused",
                 "fused_speedup", "fused_match_ref",
                 "dom_counts_match_ref"],
+    "frontend": ["n_clients", "n_slots", "max_queue", "pop_size",
+                 "budget_gens", "gens_per_step", "wall_s", "jobs_per_sec",
+                 "submit_to_champion_p50_ms", "submit_to_champion_p99_ms",
+                 "backpressure_waits", "step_compiles",
+                 "concurrent_match_sequential"],
     "compile": ["pop_size", "n_slots", "gens_per_step", "budget_gens",
                 "grow_to", "cache_salt", "ttfg_cold_ms", "ttfg_warm_ms",
                 "ttfg_speedup", "compiles_cold", "recompiles_cold",
@@ -125,6 +134,9 @@ BOOLEANS = [
      "fused Pallas evaluation diverged from the ref oracles"),
     ("kernels", "dom_counts_match_ref",
      "fused domination counts diverged from the domination matrix"),
+    ("frontend", "concurrent_match_sequential",
+     "concurrent submission through the async front-end changed results "
+     "vs a hand-pumped sequential scheduler"),
     ("compile", "recompiles_warm_zero",
      "warm start against a populated persistent cache performed a real "
      "XLA compile (persistence or cache keying broke)"),
@@ -146,6 +158,9 @@ THROUGHPUT = [
      ["pop_size", "n_nets", "n_units", "n_gids", "reps"]),
     ("kernels", "evals_per_sec_unfused",
      ["pop_size", "n_nets", "n_units", "n_gids", "reps"]),
+    ("frontend", "jobs_per_sec",
+     ["n_clients", "n_slots", "max_queue", "pop_size", "budget_gens",
+      "gens_per_step"]),
 ]
 SLOWDOWN_WARN = 0.8        # warn when new < 80% of baseline
 

@@ -9,6 +9,8 @@
         --cache --policy deadline --autoscale
     PYTHONPATH=src python -m repro.launch.serve --placement \
         --islands 4 --migrate-every 4
+    PYTHONPATH=src python -m repro.launch.serve --placement --frontend \
+        --requests 16 --max-queue 8 --cancel-every 5
 
 `--placement` runs the batched placement-as-a-service engine
 (`serve.placement_service`): a fixed slot pool continuously batches many
@@ -35,6 +37,14 @@ restarted launcher deserializes its pool programs instead of recompiling;
 `--prewarm` attaches the background AOT compiler to the scheduler --
 store-predicted pools (`--cache-path` traffic) build off-thread before
 their first job, and autoscale ladder sizes pre-compile before `grow()`.
+
+`--frontend` serves the workload through the asyncio front-end
+(`serve.frontend.PlacementFrontend`): one concurrent client task per
+request submits a `serve.api.JobRequest` and awaits its `JobHandle`,
+client 0 streams live progress, `--cancel-every K` cancels every K-th
+job mid-flight, and `--max-queue` bounds outstanding admissions
+(backpressure).  Composes with every control-plane flag above -- the
+front-end owns the stepping thread over the same scheduler.
 """
 import argparse
 import os
@@ -115,6 +125,7 @@ def control_plane_main(args) -> None:
     import time
 
     from repro.core import nsga2
+    from repro.serve.api import JobRequest
     from repro.serve.champion_store import ChampionStore
     from repro.serve.placement_service import make_job_specs
     from repro.serve.scheduler import PlacementScheduler
@@ -159,9 +170,10 @@ def control_plane_main(args) -> None:
 
     def wave(tag, specs, **kw):
         t0 = time.perf_counter()
-        jids = [sch.submit(args.device, s["cfg"], seed=s["seed"],
-                           budget=s["budget"], target=s.get("target"),
-                           islands=icfg, **kw)
+        jids = [sch.submit_request(JobRequest(
+                    device=args.device, cfg=s["cfg"], seed=s["seed"],
+                    budget=s["budget"], target=s.get("target"),
+                    islands=icfg, **kw))
                 for s in specs]
         done = {j.jid: j for j in sch.run_all()}
         dt = time.perf_counter() - t0
@@ -184,10 +196,12 @@ def control_plane_main(args) -> None:
         urgent_cfg = nsga2.NSGA2Config(pop_size=max(2, args.pop // 2),
                                        fused=args.fused)
         for s in specs:
-            sch.submit(args.device, s["cfg"], seed=s["seed"],
-                       budget=s["budget"], deadline=1e9, islands=icfg)
-        ujid = sch.submit(args.device, urgent_cfg, seed=0,
-                          budget=args.gens, deadline=1.0, islands=icfg)
+            sch.submit_request(JobRequest(
+                device=args.device, cfg=s["cfg"], seed=s["seed"],
+                budget=s["budget"], deadline=1e9, islands=icfg))
+        ujid = sch.submit_request(JobRequest(
+            device=args.device, cfg=urgent_cfg, seed=0,
+            budget=args.gens, deadline=1.0, islands=icfg))
         order = [j.jid for j in sch.run_all()]
         print(f"  urgent job finished {order.index(ujid) + 1}/{len(order)}")
     else:
@@ -212,6 +226,80 @@ def control_plane_main(args) -> None:
           f"compiles: " + ", ".join(
               f"{ps['sizes']}x{ps['step_compiles']}"
               for ps in s["pools"].values()))
+
+
+def frontend_main(args) -> None:
+    """--frontend: the same placement workload, served through the asyncio
+    front-end -- N concurrent client coroutines, mixed priorities, optional
+    mid-flight cancellations, live progress for client 0, and per-client
+    submit->result latency percentiles at the end."""
+    import asyncio
+    import time
+
+    import numpy as np
+
+    from repro.serve.api import JobRequest
+    from repro.serve.champion_store import ChampionStore
+    from repro.serve.frontend import PlacementFrontend
+    from repro.serve.placement_service import make_job_specs
+    from repro.serve.scheduler import PlacementScheduler
+
+    store = (ChampionStore(path=args.cache_path)
+             if (args.cache or args.cache_path) else None)
+    sch = PlacementScheduler(n_slots=args.slots,
+                             gens_per_step=args.gens_per_step,
+                             policy=args.policy, store=store,
+                             autoscale=args.autoscale,
+                             prewarm=args.prewarm)
+    icfg = _island_config(args)
+    specs = make_job_specs(args.requests, args.pop, args.gens,
+                           fused=args.fused)
+    lat: list = []
+
+    async def client(fe, i, spec):
+        req = JobRequest(device=args.device, cfg=spec["cfg"],
+                         seed=spec["seed"], budget=spec["budget"],
+                         priority=float(i % 3), islands=icfg)
+        t0 = time.perf_counter()
+        handle = await fe.submit(req)
+        if i == 0:                         # one client streams progress
+            async for u in handle.progress():
+                eta = f"  eta={u.eta_s:.1f}s" if u.eta_s else ""
+                print(f"  job{u.jid} progress: gen {u.gens}/{u.budget}"
+                      f"  metric={u.metric:.3e}{eta}")
+        if args.cancel_every and (i + 1) % args.cancel_every == 0:
+            handle.cancel()
+            try:
+                await handle.wait()
+            except Exception:              # noqa: BLE001 -- demo client
+                pass
+            print(f"  client{i:2d}: [{handle.status.value}]")
+            return
+        r = await handle.wait()
+        lat.append(time.perf_counter() - t0)
+        print(f"  client{i:2d}: job{handle.jid} {r.gens:3d} gens  "
+              f"metric={r.metric:.3e}")
+
+    async def run():
+        t0 = time.perf_counter()
+        async with PlacementFrontend(sch, max_queue=args.max_queue) as fe:
+            await asyncio.gather(*[client(fe, i, s)
+                                   for i, s in enumerate(specs)])
+            stats = fe.stats()
+        return stats, time.perf_counter() - t0
+
+    stats, dt = asyncio.run(run())
+    if lat:
+        p50, p99 = np.percentile(np.array(lat) * 1e3, [50, 99])
+        print(f"submit->result latency: p50={p50:.0f}ms p99={p99:.0f}ms")
+    print(f"{stats['completed']} done / {stats['cancelled']} cancelled / "
+          f"{stats['failed']} failed in {dt:.2f}s "
+          f"({stats['completed'] / dt:.2f} jobs/s); backpressure waits: "
+          f"{stats['backpressure_waits']}")
+    fleet = stats["fleet"]
+    print(f"{fleet['n_pools']} pool(s); per-pool sizes/compiles: "
+          + ", ".join(f"{p['sizes']}x{p['step_compiles']}"
+                      for p in fleet["pools"].values()))
 
 
 def main():
@@ -267,6 +355,17 @@ def main():
                     help="background AOT pool compiler (serve.prewarm): "
                          "store-predicted pools and autoscale ladder sizes "
                          "compile off the stepping loop")
+    # async front-end flags (route through serve.frontend)
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the asyncio front-end "
+                         "(serve.frontend): concurrent clients, streaming "
+                         "progress, cancellation, backpressure")
+    ap.add_argument("--max-queue", type=int, default=32,
+                    help="front-end admission bound: submits beyond this "
+                         "many outstanding jobs await a free credit")
+    ap.add_argument("--cancel-every", type=int, default=0, metavar="K",
+                    help="with --frontend, cancel every K-th job "
+                         "mid-flight (0 = never)")
     args = ap.parse_args()
 
     if args.placement:
@@ -275,8 +374,10 @@ def main():
         if enabled:
             print(f"persistent compilation cache: {enabled} "
                   f"({compile_cache.cache_salt()})")
-        if (args.cache or args.cache_path or args.autoscale
-                or args.prewarm or args.policy != "round_robin"):
+        if args.frontend:
+            frontend_main(args)
+        elif (args.cache or args.cache_path or args.autoscale
+              or args.prewarm or args.policy != "round_robin"):
             control_plane_main(args)
         else:
             placement_main(args)

@@ -68,6 +68,8 @@ from repro.core import objectives as O
 from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
 from repro.runtime import compile_cache
+from repro.serve import api
+from repro.serve.api import JobRequest, ServiceStats
 
 
 def make_job_specs(n: int, pop_size: int, budget: int, seed: int = 0,
@@ -102,6 +104,7 @@ class PlacementJob:
     gens: int = 0                  # generations run so far
     warm: bool = False             # seeded via submit(init_state=...)
     done: bool = False
+    cancelled: bool = False        # slot freed early by cancel()
     best_objs: Optional[np.ndarray] = None   # [2] = (wl^2, max bbox)
     metric: float = float("inf")             # combined metric of best_objs
     genotype: Any = None                     # best full genotype at harvest
@@ -139,6 +142,7 @@ class PlacementService:
         self.key = jax.random.PRNGKey(seed)
         self.total_steps = 0
         self.useful_gens = 0       # active-slot generations actually served
+        self.jobs_cancelled = 0    # slots freed early via cancel()
         # compile observability: the process meter separates *blocking*
         # compiles (on the thread calling submit/step/grow -- the stepping
         # loop's latency) from background prewarm compiles
@@ -223,6 +227,12 @@ class PlacementService:
                sigma_shrink: float = 0.25) -> Optional[int]:
         """Admit one job; returns its jid, or None if the pool is full.
 
+        The canonical form is `submit(request)` with a
+        `serve.api.JobRequest` as the only argument; the kwarg form
+        survives as a deprecated shim that builds the same request
+        (results are bitwise identical -- the shim only repackages
+        arguments).
+
         Budgets are quantized UP to the pool's `gens_per_step` granularity
         (the batched step advances whole steps only); `job.budget` records
         the quantized value, which the job then runs exactly.
@@ -238,8 +248,44 @@ class PlacementService:
         there.  Warm jobs stay reproducible: the result is a pure function
         of (config, seed, budget, init_state, jitter, sigma_shrink).
         """
-        cfg = self.base_cfg if cfg is None else cfg
-        budget = -(-budget // self.gens_per_step) * self.gens_per_step
+        if isinstance(cfg, JobRequest):
+            request = cfg
+        else:
+            request = api.deprecated_kwargs_request(
+                "PlacementService", cfg=cfg, seed=seed, budget=budget,
+                target=target, init_state=init_state, jitter=jitter,
+                sigma_shrink=sigma_shrink, algo=self.algo)
+        return self.submit_request(request)
+
+    def submit_request(self, request: JobRequest) -> Optional[int]:
+        """`submit()` on the unified request type (no shim, no warning):
+        admit one job described by a `serve.api.JobRequest`; returns its
+        jid, or None when the pool is full.
+
+        Routing fields are validated, never silently re-routed: a request
+        whose `algo` or `islands` disagrees with this pool raises (the
+        scheduler is the layer that routes mixed traffic)."""
+        if request.algo is not None and request.algo != self.algo:
+            raise ValueError(
+                f"request.algo={request.algo!r} does not match this "
+                f"pool's algo={self.algo!r}; route via PlacementScheduler")
+        if (request.islands is not None
+                and request.islands != self.islands):
+            raise ValueError(
+                f"request.islands={request.islands} does not match this "
+                f"pool's islands={self.islands}; route via "
+                "PlacementScheduler")
+        if (request.gens_per_step is not None
+                and request.gens_per_step != self.gens_per_step):
+            raise ValueError(
+                f"request.gens_per_step={request.gens_per_step} does not "
+                f"match this pool's gens_per_step={self.gens_per_step}")
+        cfg = request.resolved_cfg(self.base_cfg)
+        seed, target = request.seed, request.target
+        init_state = request.init_state
+        jitter, sigma_shrink = request.jitter, request.sigma_shrink
+        budget = -(-request.budget // self.gens_per_step) \
+            * self.gens_per_step
         static_key, traced = hyper.split_config(cfg)
         if static_key != self.static_key:
             raise ValueError(
@@ -276,6 +322,46 @@ class PlacementService:
         self.active[slot] = True
         self.slot_job[slot] = job
         return job.jid
+
+    # ------------------------------------------------------------- cancel
+
+    def cancel(self, jid: int) -> bool:
+        """Cancel an in-flight job: its slot is freed immediately (the
+        vacant slot keeps evolving garbage that is never read, exactly
+        like a harvested one) and is reusable by the next `submit()`.
+
+        Call between `step()`s -- the step boundary.  The async front-end
+        (`serve.frontend`) guarantees this by executing cancels on the
+        stepping thread; direct callers own the discipline themselves.
+        Returns False when the jid is not currently in flight (already
+        harvested, cancelled, or never admitted).  Cancellation cannot
+        perturb co-tenant jobs: their trajectories depend only on their
+        own (seed, gens), never on slot occupancy."""
+        for slot in np.where(self.active)[0]:
+            job = self.slot_job[slot]
+            if job is not None and job.jid == jid:
+                job.cancelled = True
+                self.active[slot] = False
+                self.slot_job[slot] = None
+                self.jobs_cancelled += 1
+                return True
+        return False
+
+    def job(self, jid: int) -> Optional[PlacementJob]:
+        """The in-flight job with this jid (None once harvested/cancelled
+        -- finished jobs are returned by `step()`, not looked up here)."""
+        for slot in np.where(self.active)[0]:
+            job = self.slot_job[slot]
+            if job is not None and job.jid == jid:
+                return job
+        return None
+
+    def inflight(self) -> List[PlacementJob]:
+        """Snapshot of the jobs currently occupying slots (progress
+        streaming reads `gens`/`metric`/`best_objs` off these between
+        steps)."""
+        return [self.slot_job[slot] for slot in np.where(self.active)[0]
+                if self.slot_job[slot] is not None]
 
     # -------------------------------------------------------------- grow
 
@@ -447,19 +533,22 @@ class PlacementService:
 
     def run_jobs(self, specs: List[Dict]) -> List[PlacementJob]:
         """Rolling admission: submit specs as slots free up, step until
-        every job finishes.  Each spec is submit() kwargs."""
-        queue = list(specs)
+        every job finishes.  Each spec is a `serve.api.JobRequest` or a
+        dict of its fields (the `make_job_specs` shape)."""
+        queue = [s if isinstance(s, JobRequest)
+                 else JobRequest(algo=self.algo, **s) for s in specs]
         done: List[PlacementJob] = []
         while queue or self.active.any():
             while queue:
-                if self.submit(**queue[0]) is None:
+                if self.submit_request(queue[0]) is None:
                     break
                 queue.pop(0)
             done.extend(self.step())
         return done
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> ServiceStats:
         return {
+            "schema_version": api.STATS_SCHEMA_VERSION,
             "n_slots": self.n_slots,
             "gens_per_step": self.gens_per_step,
             "steps": self.total_steps,
@@ -468,6 +557,7 @@ class PlacementService:
             "sizes": list(self.size_history),
             "n_islands": self.islands.n_islands,
             "migrate_every": self.islands.migrate_every,
+            "jobs_cancelled": self.jobs_cancelled,
             # compile observability (process meter + this pool's split of
             # blocking vs prewarmed compiles; see runtime.compile_cache)
             "blocking_compiles": self.blocking_compiles,

@@ -126,6 +126,21 @@ class Prewarmer:
             self._stop = True
             self._cv.notify_all()
 
+    def close(self, timeout: float = 30.0) -> None:
+        """Orderly shutdown: stop accepting work and join the worker.
+
+        The in-flight task (if any) runs to completion -- interrupting an
+        XLA compile mid-flight is not safe -- but queued tasks are
+        abandoned.  Idempotent; safe to call when the thread never started.
+        """
+        with self._cv:
+            self._tasks.clear()
+            self._stop = True
+            self._cv.notify_all()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+
     # ------------------------------------------------------------- worker
 
     def _loop(self) -> None:

@@ -46,7 +46,10 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core import hyper
 from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
+from repro.serve import api
 from repro.serve import policy as P
+from repro.serve.api import (FleetStats, JobRequest, JobStatus,
+                             ProgressUpdate)
 from repro.serve.champion_store import ChampionStore
 from repro.serve.placement_service import PlacementJob, PlacementService
 from repro.serve.prewarm import Prewarmer
@@ -71,20 +74,47 @@ def _default_cfg(algo: str, pop_size: Optional[int]):
 
 @dataclasses.dataclass
 class FleetJob:
-    """A scheduler-level job: routing info + the pool job once finished."""
+    """A scheduler-level job: the request, routing info, and the pool job
+    once finished.  `status` is the unified lifecycle view
+    (`serve.api.JobStatus`); `.done`/`.failed` survive from the PR 3 API
+    (new code should read `status` -- or hold a `serve.api.JobHandle`
+    from the async front-end instead of a raw FleetJob)."""
     jid: int                       # scheduler-global id
     device: str
     algo: str
     pool_key: PoolKey
-    spec: Dict[str, Any]           # PlacementService.submit kwargs
+    request: JobRequest            # the unified job description
     priority: float = 0.0          # higher = more urgent (priority policy)
     deadline: Optional[float] = None   # smaller = sooner (deadline policy)
     pool_jid: Optional[int] = None  # set at admission
     result: Optional[PlacementJob] = None
     cached: bool = False           # served straight from the champion store
     warm_from_cache: bool = False  # init_state injected by the store
+    cancelled: bool = False        # cancelled before completion
     error: Optional[str] = None    # last admission-failure note (re-queued)
     attempts: int = 0              # failed admission attempts so far
+
+    @property
+    def status(self) -> JobStatus:
+        if self.cancelled:
+            return JobStatus.CANCELLED
+        if self.result is not None and self.result.done:
+            return JobStatus.DONE
+        if self.failed:
+            return JobStatus.FAILED
+        if self.pool_jid is not None:
+            return JobStatus.RUNNING
+        return JobStatus.QUEUED
+
+    @property
+    def spec(self) -> Dict[str, Any]:
+        """Deprecated PR 3-8 view of the request as submit() kwargs."""
+        return {"cfg": self.request.cfg, "seed": self.request.seed,
+                "budget": self.request.budget,
+                "target": self.request.target,
+                "init_state": self.request.init_state,
+                "jitter": self.request.jitter,
+                "sigma_shrink": self.request.sigma_shrink}
 
     @property
     def done(self) -> bool:
@@ -236,10 +266,10 @@ class PlacementScheduler:
         entry, kind = self.store.lookup(problem)
         if entry is None:
             return False
-        target = job.spec.get("target")
+        target = job.request.target
         if kind == "exact" and target is not None and entry.metric <= target:
             job.result = PlacementJob(
-                jid=-1, cfg=job.spec.get("cfg"), seed=job.spec.get("seed"),
+                jid=-1, cfg=job.request.cfg, seed=job.request.seed,
                 budget=0, target=target, gens=0, done=True,
                 best_objs=entry.best_objs.copy(), metric=entry.metric,
                 genotype={t: tuple(a.copy() for a in leaves)
@@ -247,9 +277,10 @@ class PlacementScheduler:
             job.cached = True
             self._cached_done.append(job)
             return True
-        if job.spec.get("init_state") is None:
-            job.spec["init_state"] = self.store.seed_for(
-                problem, entry, problem_of=self.problem)
+        if job.request.init_state is None:
+            job.request = job.request.replace(
+                init_state=self.store.seed_for(
+                    problem, entry, problem_of=self.problem))
             job.warm_from_cache = True
         return False
 
@@ -262,30 +293,55 @@ class PlacementScheduler:
 
     # ------------------------------------------------------------- admit
 
-    def submit(self, device: str, cfg, algo: str = "nsga2",
+    def submit(self, device=None, cfg=None, algo: str = "nsga2",
                gens_per_step: Optional[int] = None, priority: float = 0.0,
                deadline: Optional[float] = None,
                islands: Optional[IslandConfig] = None, **spec) -> int:
         """Enqueue one job; returns its scheduler-global jid.
 
-        `spec` is forwarded to `PlacementService.submit` (seed, budget,
-        target, init_state, jitter, sigma_shrink).  Unlike a raw pool,
-        this never rejects: a full pool queues the job FIFO and admits it
-        when a slot frees.  `priority` / `deadline` only matter to the
-        matching stepping policies (they bias completion order, never
-        results).  With a champion store attached, an exact-signature
-        cache hit meeting `target` finishes the job immediately -- no pool
-        is created and no slot is burned -- and any other exact-or-sibling
-        champion warm-starts it via `init_state` injection.  `islands`
-        routes the job to an island-model pool (`core.islands`): island
-        topology is part of the pool signature, so islands and
-        single-population traffic for the same config coexist in separate
-        pools, each still compiling once.
+        The canonical form is `submit(request)` with a
+        `serve.api.JobRequest` as the only argument; the kwarg form
+        survives as a deprecated shim that builds the same request
+        (results are bitwise identical).
+
+        Unlike a raw pool, this never rejects: a full pool queues the job
+        FIFO and admits it when a slot frees.  `priority` / `deadline`
+        only matter to the matching stepping policies (they bias
+        completion order, never results).  With a champion store attached,
+        an exact-signature cache hit meeting `target` finishes the job
+        immediately -- no pool is created and no slot is burned -- and any
+        other exact-or-sibling champion warm-starts it via `init_state`
+        injection.  `islands` routes the job to an island-model pool
+        (`core.islands`): island topology is part of the pool signature,
+        so islands and single-population traffic for the same config
+        coexist in separate pools, each still compiling once.
         """
-        key = self.pool_key(device, algo, cfg, gens_per_step, islands)
-        job = FleetJob(self.next_jid, device, algo, key,
-                       spec=dict(spec, cfg=cfg),
-                       priority=priority, deadline=deadline)
+        if isinstance(device, JobRequest):
+            request = device
+        else:
+            request = api.deprecated_kwargs_request(
+                "PlacementScheduler", device=device, cfg=cfg, algo=algo,
+                gens_per_step=gens_per_step, priority=priority,
+                deadline=deadline, islands=islands, **spec)
+        return self.submit_request(request)
+
+    def submit_request(self, request: JobRequest) -> int:
+        """`submit()` on the unified request type (no shim, no warning)."""
+        if request.device is None:
+            raise ValueError("JobRequest.device is required at the "
+                             "scheduler (it picks the problem and pool)")
+        if request.cfg is None:
+            raise ValueError("JobRequest.cfg is required at the scheduler "
+                             "(pools have no shared base config)")
+        device, algo = request.device, request.algo
+        cfg = request.resolved_cfg()
+        if cfg is not request.cfg:          # fused override applied
+            request = request.replace(cfg=cfg, fused=None)
+        key = self.pool_key(device, algo, cfg, request.gens_per_step,
+                            request.islands)
+        job = FleetJob(self.next_jid, device, algo, key, request=request,
+                       priority=request.priority,
+                       deadline=request.deadline)
         self.next_jid += 1
         self.jobs[job.jid] = job
         if self.store is not None:
@@ -302,6 +358,34 @@ class PlacementScheduler:
         if len(self._pending[key]) == 1:   # a waiting head means pool full
             self._admit(key)
         return job.jid
+
+    # ------------------------------------------------------------- cancel
+
+    def cancel(self, jid: int) -> bool:
+        """Cancel a job at the next step boundary: a pending job leaves
+        its FIFO, an in-flight job's slot is freed and refilled from the
+        queue.  Returns False when the job is already terminal.  Like
+        `PlacementService.cancel`, call between `step()`s -- the async
+        front-end executes cancels on its stepping thread, which
+        guarantees the boundary."""
+        job = self.jobs.get(jid)
+        if job is None or job.status.terminal:
+            return False
+        if job.pool_jid is not None:       # in flight: free the slot
+            self._inflight.pop((job.pool_key, job.pool_jid), None)
+            self._pools[job.pool_key].cancel(job.pool_jid)
+            job.cancelled = True
+            self._admit(job.pool_key)      # the freed slot refills now
+            return True
+        # pending (or cached-but-undrained): pull it out of the queue
+        queue = self._pending.get(job.pool_key)
+        if queue is not None and job in queue:
+            queue.remove(job)
+            job.cancelled = True
+            return True
+        if job in self._cached_done:       # cache hit not yet drained:
+            return False                   # already answered, too late
+        return False
 
     def _admit(self, key: PoolKey) -> None:
         """Drain the pool's FIFO head into free slots: O(jobs admitted),
@@ -320,7 +404,7 @@ class PlacementScheduler:
             admissible -= 1
             job = queue[0]
             try:
-                pool_jid = pool.submit(**job.spec)
+                pool_jid = pool.submit_request(job.request)
             except Exception as e:         # noqa: BLE001 -- never drop a job
                 queue.pop(0)
                 job.attempts += 1
@@ -412,6 +496,35 @@ class PlacementScheduler:
             done.extend(self.step())
         return done
 
+    def progress(self) -> List[ProgressUpdate]:
+        """Generation-boundary snapshot of every in-flight job (the async
+        front-end streams these through `JobHandle.progress()` after each
+        `step()`; ETA extrapolation is the front-end's job -- the
+        scheduler reports ground truth only)."""
+        out: List[ProgressUpdate] = []
+        for (key, pool_jid), job in list(self._inflight.items()):
+            pj = self._pools[key].job(pool_jid)
+            if pj is None:
+                continue
+            out.append(ProgressUpdate(
+                jid=job.jid, status=JobStatus.RUNNING, gens=pj.gens,
+                budget=pj.budget, metric=pj.metric,
+                best_objs=pj.best_objs))
+        return out
+
+    # ------------------------------------------------------------ closing
+
+    def close(self) -> None:
+        """Orderly shutdown of the attached background machinery: stop
+        (and join) the prewarm worker and persist the champion store when
+        it was constructed with a path.  Idempotent; in-flight jobs are
+        NOT waited for -- drain with `run_all()` (or the front-end's
+        `drain()`) first."""
+        if self.prewarmer is not None:
+            self.prewarmer.close()
+        if self.store is not None and self.store.path is not None:
+            self.store.save()
+
     # -------------------------------------------------------------- stats
 
     def _label(self, key: PoolKey) -> str:
@@ -422,17 +535,21 @@ class PlacementScheduler:
             label += f"/isl={icfg.n_islands}x{icfg.migrate_every}"
         return label
 
-    def stats(self) -> Dict[str, Any]:
+    def stats(self) -> FleetStats:
         pools = {}
         for key in self._rotation:
             pools[self._label(key)] = dict(
                 self._pools[key].stats(),
                 queue_depth=len(self._pending[key]))
+        statuses = [j.status for j in self.jobs.values()]
         out = {
+            "schema_version": api.STATS_SCHEMA_VERSION,
             "n_pools": len(self._pools),
             "jobs_submitted": self.next_jid,
-            "jobs_done": sum(j.done for j in self.jobs.values()),
-            "jobs_failed": sum(j.failed for j in self.jobs.values()),
+            "jobs_done": sum(s is JobStatus.DONE for s in statuses),
+            "jobs_failed": sum(s is JobStatus.FAILED for s in statuses),
+            "jobs_cancelled": sum(s is JobStatus.CANCELLED
+                                  for s in statuses),
             "policy": getattr(self.policy, "name", type(self.policy).__name__),
             "autoscale_events": list(self.autoscale_events),
             "pools": pools,

@@ -285,15 +285,15 @@ def _patched_sched():
 
 def test_admit_failure_requeues_with_error_note():
     sch, pool = _patched_sched()
-    orig, calls = pool.submit, {"n": 0}
+    orig, calls = pool.submit_request, {"n": 0}
 
-    def flaky(**kw):
+    def flaky(req):
         calls["n"] += 1
         if calls["n"] <= 2:                   # fail twice, then recover
             raise RuntimeError("slot allocator hiccup")
-        return orig(**kw)
+        return orig(req)
 
-    pool.submit = flaky
+    pool.submit_request = flaky
     jid = sch.submit("xcvu_test", CFG, seed=0, budget=2)
     job = sch.jobs[jid]
     assert job.attempts == 1                  # first try failed at submit
@@ -306,14 +306,14 @@ def test_admit_failure_requeues_with_error_note():
 
 def test_admit_permanent_failure_surfaces_without_wedging():
     sch, pool = _patched_sched()
-    orig = pool.submit
+    orig = pool.submit_request
 
-    def poison(**kw):
-        if kw.get("seed") == 1:
+    def poison(req):
+        if req.seed == 1:
             raise RuntimeError("poisoned job")
-        return orig(**kw)
+        return orig(req)
 
-    pool.submit = poison
+    pool.submit_request = poison
     bad = sch.submit("xcvu_test", CFG, seed=1, budget=2)
     good = sch.submit("xcvu_test", CFG, seed=2, budget=2)
     done = {j.jid: j for j in sch.run_all()}  # must terminate

@@ -1,0 +1,301 @@
+"""Async front-end + unified serve API: admission, cancellation, drain.
+
+Covers the PR's acceptance contracts:
+  * one request type: `serve.api.JobRequest` accepted by both
+    `PlacementService.submit` and `PlacementScheduler.submit`; the legacy
+    kwarg forms emit `DeprecationWarning` and produce bitwise-identical
+    results,
+  * one handle type: `JobHandle.status` / `.result()` / `.exception()`
+    with the PR 1-8 attributes (`.done`, `.failed`) as deprecated
+    properties,
+  * versioned stats: every layer's `stats()` carries `schema_version`
+    and the documented typed keys,
+  * the front-end: cancellation actually frees and reuses the slot,
+    bounded admission blocks (`await submit`) / raises (`submit_nowait`)
+    under load and drains as jobs finish, `drain()` loses and duplicates
+    nothing, and concurrent submission is bitwise deterministic against
+    a hand-pumped sequential scheduler.
+
+No pytest-asyncio in the toolchain: async scenarios run under
+`asyncio.run()` inside synchronous tests.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import nsga2
+from repro.fpga import device, netlist
+from repro.serve.api import (JobCancelledError, JobHandle, JobRequest,
+                             JobStatus, QueueFull)
+from repro.serve.frontend import PlacementFrontend
+from repro.serve.placement_service import PlacementService
+from repro.serve.scheduler import PlacementScheduler
+
+BASE = netlist.make_problem(device.get_device("xcvu_test"))
+CFG = nsga2.NSGA2Config(pop_size=8)
+
+
+def _req(seed: int, budget: int = 4, **kw) -> JobRequest:
+    return JobRequest(device="xcvu_test", cfg=CFG, seed=seed,
+                      budget=budget, **kw)
+
+
+def _drain_service(svc) -> dict:
+    done = {}
+    while svc.active.any():
+        for j in svc.step():
+            done[j.jid] = j
+    return done
+
+
+# ------------------------------------------------- unified request type
+
+def test_service_kwargs_vs_request_bitwise_identical():
+    svc_kw = PlacementService(BASE, CFG, n_slots=1, gens_per_step=2)
+    with pytest.warns(DeprecationWarning, match="JobRequest"):
+        jid_kw = svc_kw.submit(cfg=CFG, seed=7, budget=4)
+    svc_rq = PlacementService(BASE, CFG, n_slots=1, gens_per_step=2)
+    jid_rq = svc_rq.submit_request(JobRequest(cfg=CFG, seed=7, budget=4))
+    a = _drain_service(svc_kw)[jid_kw]
+    b = _drain_service(svc_rq)[jid_rq]
+    assert np.array_equal(a.best_objs, b.best_objs)
+    assert a.metric == b.metric
+    for t in a.genotype:
+        for x, y in zip(a.genotype[t], b.genotype[t]):
+            assert np.array_equal(x, y)
+
+
+def test_scheduler_kwargs_vs_request_bitwise_identical():
+    s_kw = PlacementScheduler(n_slots=1, gens_per_step=2)
+    with pytest.warns(DeprecationWarning, match="JobRequest"):
+        jid_kw = s_kw.submit("xcvu_test", CFG, seed=9, budget=4)
+    s_rq = PlacementScheduler(n_slots=1, gens_per_step=2)
+    jid_rq = s_rq.submit_request(_req(seed=9))
+    a = {j.jid: j for j in s_kw.run_all()}[jid_kw].result
+    b = {j.jid: j for j in s_rq.run_all()}[jid_rq].result
+    assert np.array_equal(a.best_objs, b.best_objs)
+    assert a.metric == b.metric
+
+
+def test_request_validation_rejects_mismatched_routing():
+    svc = PlacementService(BASE, CFG, n_slots=1, gens_per_step=2)
+    with pytest.raises(ValueError, match="algo"):
+        svc.submit_request(JobRequest(cfg=CFG, algo="cmaes", seed=0))
+    with pytest.raises(ValueError, match="gens_per_step"):
+        svc.submit_request(JobRequest(cfg=CFG, seed=0, gens_per_step=7))
+    sched = PlacementScheduler(n_slots=1)
+    with pytest.raises(ValueError, match="device"):
+        sched.submit_request(JobRequest(cfg=CFG, seed=0))
+    with pytest.raises(ValueError, match="cfg"):
+        sched.submit_request(JobRequest(device="xcvu_test", seed=0))
+
+
+# --------------------------------------------------- unified handle type
+
+def test_jobhandle_deprecated_attributes_still_work():
+    h = JobHandle(jid=0, request=_req(seed=0))
+    with pytest.warns(DeprecationWarning, match="status"):
+        assert h.done is False
+    with pytest.warns(DeprecationWarning, match="status"):
+        assert h.failed is False
+    h._resolve("payload")
+    with pytest.warns(DeprecationWarning):
+        assert h.done is True
+    assert h.status is JobStatus.DONE
+    assert h.result(timeout=0) == "payload"
+    assert h.exception(timeout=0) is None
+    assert h.cancel() is False            # terminal: too late
+
+
+def test_jobhandle_failure_and_timeout_surface():
+    h = JobHandle(jid=1, request=_req(seed=1))
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.01)
+    h._fail(RuntimeError("boom"))
+    assert h.status is JobStatus.FAILED
+    with pytest.raises(RuntimeError, match="boom"):
+        h.result(timeout=0)
+    assert isinstance(h.exception(timeout=0), RuntimeError)
+
+
+# --------------------------------------------------- versioned stats
+
+def test_stats_schema_versioned_across_layers():
+    svc = PlacementService(BASE, CFG, n_slots=1, gens_per_step=2)
+    s = svc.stats()
+    assert s["schema_version"] == 1
+    for key in ("n_slots", "steps", "step_compiles", "jobs_cancelled",
+                "time_to_first_gen_ms", "recompiles_total"):
+        assert key in s
+    sched = PlacementScheduler(n_slots=1, gens_per_step=2)
+    sched.submit_request(_req(seed=3))
+    sched.run_all()
+    f = sched.stats()
+    assert f["schema_version"] == 1
+    assert f["jobs_done"] == 1 and f["jobs_cancelled"] == 0
+    assert all(p["schema_version"] == 1 for p in f["pools"].values())
+
+
+# --------------------------------------------------------- cancellation
+
+def test_service_cancel_frees_and_reuses_slot():
+    svc = PlacementService(BASE, CFG, n_slots=2, gens_per_step=2)
+    a = svc.submit_request(JobRequest(cfg=CFG, seed=1, budget=8))
+    b = svc.submit_request(JobRequest(cfg=CFG, seed=2, budget=8))
+    assert svc.submit_request(JobRequest(cfg=CFG, seed=3)) is None  # full
+    assert svc.cancel(a) is True
+    assert svc.cancel(a) is False          # already freed
+    c = svc.submit_request(JobRequest(cfg=CFG, seed=3, budget=4))
+    assert c is not None                   # the freed slot, reused
+    done = _drain_service(svc)
+    assert set(done) == {b, c}             # cancelled job never harvested
+    assert svc.stats()["jobs_cancelled"] == 1
+
+
+def test_scheduler_cancel_pending_and_inflight():
+    sched = PlacementScheduler(n_slots=1, gens_per_step=2)
+    running = sched.submit_request(_req(seed=1, budget=8))
+    queued = sched.submit_request(_req(seed=2, budget=4))
+    waiting = sched.submit_request(_req(seed=3, budget=4))
+    assert sched.jobs[running].status is JobStatus.RUNNING
+    assert sched.jobs[queued].status is JobStatus.QUEUED
+    assert sched.cancel(queued) is True    # leaves the FIFO
+    assert sched.cancel(running) is True   # frees + refills the slot
+    assert sched.jobs[waiting].status is JobStatus.RUNNING
+    done = {j.jid for j in sched.run_all()}
+    assert done == {waiting}
+    assert sched.cancel(waiting) is False  # terminal: too late
+    s = sched.stats()
+    assert s["jobs_cancelled"] == 2 and s["jobs_done"] == 1
+
+
+def test_frontend_cancel_frees_slot_at_step_boundary():
+    async def main():
+        sched = PlacementScheduler(n_slots=1, gens_per_step=2)
+        async with PlacementFrontend(sched, max_queue=4) as fe:
+            big = await fe.submit(_req(seed=1, budget=10_000))
+            small = await fe.submit(_req(seed=2, budget=4))
+            # wait until the long job is actually occupying the slot
+            async for _ in big.progress():
+                break
+            assert big.cancel() is True
+            with pytest.raises(JobCancelledError):
+                await big.wait()
+            assert big.status is JobStatus.CANCELLED
+            r = await small.wait()         # ran in the freed slot
+            assert r.done and r.gens == 4
+            return fe.stats()
+    s = asyncio.run(main())
+    assert s["cancelled"] == 1 and s["completed"] == 1
+    assert s["fleet"]["jobs_cancelled"] == 1
+
+
+# --------------------------------------------------------- backpressure
+
+def test_backpressure_blocks_then_drains():
+    async def main():
+        sched = PlacementScheduler(n_slots=2, gens_per_step=2)
+        async with PlacementFrontend(sched, max_queue=2) as fe:
+            h1 = fe.submit_nowait(_req(seed=1, budget=10_000))
+            h2 = fe.submit_nowait(_req(seed=2, budget=10_000))
+            with pytest.raises(QueueFull):
+                fe.submit_nowait(_req(seed=3))
+            assert fe.queue_full_rejections == 1
+            blocked = asyncio.create_task(fe.submit(_req(seed=4, budget=4)))
+            await asyncio.sleep(0.05)
+            assert not blocked.done()      # caller suspended, not erroring
+            assert fe.backpressure_waits == 1
+            assert h1.cancel() is True     # frees one admission credit
+            h4 = await blocked             # ...which un-blocks the submit
+            r = await h4.wait()
+            assert r.done
+            h2.cancel()
+            with pytest.raises(JobCancelledError):
+                await h2.wait()
+    asyncio.run(main())
+
+
+# ------------------------------------------------------ drain under load
+
+def test_drain_under_load_loses_and_duplicates_nothing():
+    seeds = list(range(20, 28))
+
+    async def main():
+        sched = PlacementScheduler(n_slots=2, gens_per_step=2)
+        fe = PlacementFrontend(sched, max_queue=len(seeds))
+        async with fe:
+            handles = [await fe.submit(_req(seed=s, budget=4))
+                       for s in seeds]
+            await fe.drain()
+            with pytest.raises(RuntimeError, match="draining"):
+                await fe.submit(_req(seed=99))
+            assert all(h.status is JobStatus.DONE for h in handles)
+            results = [h.result(timeout=0) for h in handles]
+            # nothing lost, nothing duplicated: every submit produced
+            # exactly one distinct finished job
+            assert len({id(r) for r in results}) == len(seeds)
+            assert all(r.done and r.gens == 4 for r in results)
+            s = fe.stats()
+            assert s["submitted"] == s["completed"] == len(seeds)
+            assert s["failed"] == 0 and s["cancelled"] == 0
+            assert s["fleet"]["jobs_done"] == len(seeds)
+    asyncio.run(main())
+
+
+# --------------------------------------- concurrent-submit determinism
+
+def test_concurrent_submit_matches_sequential_bitwise():
+    reqs = [_req(seed=100 + i, budget=6) for i in range(5)]
+
+    sched = PlacementScheduler(n_slots=2, gens_per_step=2)
+    jids = [sched.submit_request(r) for r in reqs]
+    by_jid = {j.jid: j for j in sched.run_all()}
+    ref = {r.seed: by_jid[j].result.best_objs for r, j in zip(reqs, jids)}
+
+    async def main():
+        sched2 = PlacementScheduler(n_slots=2, gens_per_step=2)
+        async with PlacementFrontend(sched2, max_queue=8) as fe:
+            handles = await asyncio.gather(*[fe.submit(r) for r in reqs])
+            out = await asyncio.gather(*[h.wait() for h in handles])
+        return {r.seed: pj.best_objs for r, pj in zip(reqs, out)}
+
+    got = asyncio.run(main())
+    for r in reqs:
+        assert np.array_equal(ref[r.seed], got[r.seed])
+
+
+# ----------------------------------------------------- progress stream
+
+def test_progress_stream_monotone_and_terminates():
+    async def main():
+        sched = PlacementScheduler(n_slots=1, gens_per_step=2)
+        async with PlacementFrontend(sched, max_queue=2) as fe:
+            h = await fe.submit(_req(seed=5, budget=12))
+            gens = []
+            async for u in h.progress():
+                assert u.status is JobStatus.RUNNING
+                assert np.isfinite(u.metric)
+                gens.append(u.gens)
+            assert gens == sorted(gens)    # monotone generation counter
+            assert gens and gens[-1] <= 12
+            assert h.status is JobStatus.DONE
+            r = await h.wait()
+            assert r.gens == 12
+    asyncio.run(main())
+
+
+def test_frontend_bad_request_fails_handle_not_thread():
+    async def main():
+        sched = PlacementScheduler(n_slots=1, gens_per_step=2)
+        async with PlacementFrontend(sched, max_queue=4) as fe:
+            bad = await fe.submit(JobRequest(cfg=CFG, seed=0))  # no device
+            with pytest.raises(ValueError, match="device"):
+                await bad.wait()
+            assert bad.status is JobStatus.FAILED
+            good = await fe.submit(_req(seed=6, budget=4))
+            r = await good.wait()          # co-tenants keep flowing
+            assert r.done
+            s = fe.stats()
+            assert s["failed"] == 1 and s["completed"] == 1
+    asyncio.run(main())
