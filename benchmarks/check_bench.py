@@ -35,7 +35,15 @@ Hard failures (exit 1) -- correctness of the serving contracts:
     populated persistent compilation cache performed a real XLA compile:
     something stopped persisting or the cache key churned) or
     `compile.warm_ttfg_5x` false (the cache-restored time to first
-    generation no longer beats a cold start by >= 5x).
+    generation no longer beats a cold start by >= 5x),
+  * `telemetry.trace_events_complete` false (a traced run no longer
+    reconciles exactly -- a job missed its `job.submit` or its single
+    terminal event),
+  * `telemetry.jobs_per_sec_off` below 98% of the baseline at an
+    identical workload shape -- the ONLY throughput key that hard-fails:
+    instrumented-but-disabled serving must stay within 2% of the
+    pre-instrumentation build, so any new per-event cost on the disabled
+    path is a contract break, not noise.
 
 Compile-budget mode (CI `compile-budget` job):
 
@@ -98,6 +106,10 @@ REQUIRED: Dict[str, List[str]] = {
                  "submit_to_champion_p50_ms", "submit_to_champion_p99_ms",
                  "backpressure_waits", "step_compiles",
                  "concurrent_match_sequential"],
+    "telemetry": ["n_clients", "n_slots", "max_queue", "pop_size",
+                  "budget_gens", "gens_per_step", "rounds",
+                  "jobs_per_sec_off", "jobs_per_sec_on",
+                  "enabled_overhead_pct", "trace_events_complete"],
     "compile": ["pop_size", "n_slots", "gens_per_step", "budget_gens",
                 "grow_to", "cache_salt", "ttfg_cold_ms", "ttfg_warm_ms",
                 "ttfg_speedup", "compiles_cold", "recompiles_cold",
@@ -137,6 +149,9 @@ BOOLEANS = [
     ("frontend", "concurrent_match_sequential",
      "concurrent submission through the async front-end changed results "
      "vs a hand-pumped sequential scheduler"),
+    ("telemetry", "trace_events_complete",
+     "a traced front-end run no longer reconciles (missing job.submit or "
+     "terminal event for some job)"),
     ("compile", "recompiles_warm_zero",
      "warm start against a populated persistent cache performed a real "
      "XLA compile (persistence or cache keying broke)"),
@@ -161,8 +176,18 @@ THROUGHPUT = [
     ("frontend", "jobs_per_sec",
      ["n_clients", "n_slots", "max_queue", "pop_size", "budget_gens",
       "gens_per_step"]),
+    ("telemetry", "jobs_per_sec_on",
+     ["n_clients", "n_slots", "max_queue", "pop_size", "budget_gens",
+      "gens_per_step", "rounds"]),
 ]
 SLOWDOWN_WARN = 0.8        # warn when new < 80% of baseline
+
+# telemetry's DISABLED path is the one throughput number that hard-fails:
+# the observability layer's contract is near-zero cost when off, so a
+# >2% regression at an identical shape is a broken contract, not noise
+TELEMETRY_OFF_SHAPE = ["n_clients", "n_slots", "max_queue", "pop_size",
+                       "budget_gens", "gens_per_step", "rounds"]
+TELEMETRY_OFF_FLOOR = 0.98
 
 
 def check(report: dict, baseline: dict = None) -> List[str]:
@@ -216,6 +241,34 @@ def check(report: dict, baseline: dict = None) -> List[str]:
                       f"{old[key]:.3f} -> {new[key]:.3f} "
                       f"({100 * new[key] / old[key]:.0f}% of baseline; "
                       "warn-only)")
+
+        # hard gate: telemetry-off throughput within 2% of baseline
+        new, old = (report.get("telemetry") or {}), \
+                   (baseline.get("telemetry") or {})
+        if "jobs_per_sec_off" in new:
+            if "jobs_per_sec_off" not in old:
+                print("WARNING: baseline lacks telemetry.jobs_per_sec_off "
+                      "(predates the telemetry section?); the disabled-"
+                      "overhead gate is unarmed -- regenerate "
+                      "benchmarks/BENCH_smoke_baseline.json")
+            elif any(new.get(s) != old.get(s)
+                     for s in TELEMETRY_OFF_SHAPE):
+                print("note: telemetry workload shape differs from "
+                      "baseline; disabled-overhead gate skipped")
+            elif (old["jobs_per_sec_off"] > 0
+                  and new["jobs_per_sec_off"]
+                  < old["jobs_per_sec_off"] * TELEMETRY_OFF_FLOOR):
+                errors.append(
+                    "telemetry.jobs_per_sec_off regressed "
+                    f"{old['jobs_per_sec_off']:.3f} -> "
+                    f"{new['jobs_per_sec_off']:.3f} (below "
+                    f"{100 * TELEMETRY_OFF_FLOOR:.0f}% of baseline): "
+                    "telemetry-disabled serving is no longer free")
+    overhead = (report.get("telemetry") or {}).get("enabled_overhead_pct")
+    if overhead is not None and overhead > 10.0:
+        print(f"WARNING: telemetry.enabled_overhead_pct = {overhead}% "
+              "(warn-only; tracing-on cost is an exporter concern, not a "
+              "serving-contract break)")
     return errors
 
 

@@ -1,0 +1,237 @@
+"""Telemetry-artifact validator (CI `telemetry-smoke` job).
+
+    python -m benchmarks.check_telemetry \
+        [--trace T.jsonl] [--metrics M.txt] [--chrome C.json] \
+        [--expect-jobs N]
+
+Validates the three exporter artifacts a smoke serving run produces
+(`launch/serve.py --trace-file --metrics-dump --chrome-trace`); at least
+one artifact must be given.  Hard failures (exit 1):
+
+  * JSONL trace: a line is not a JSON object, or lacks a required field
+    (`name`, `kind`, `ts`, `wall`, `attrs`), or carries an unknown
+    `kind`, or is a `job.*` event without a `trace` id (pool-lifecycle
+    spans are process-scoped and legitimately carry none); a job trace
+    with a `job.submit` but no terminal event, with a terminal event but
+    no `job.submit`, or with
+    MORE than one terminal event (`job.harvested` / `job.cancelled` /
+    `job.failed` / `job.cache_hit` are mutually exclusive, exactly-once);
+    `--expect-jobs N` additionally pins the number of submitted jobs.
+  * Prometheus exposition: a sample line that does not parse as
+    `name{labels} value`, a samples block without a preceding
+    `# TYPE`/`# HELP` pair, a histogram whose cumulative `_bucket`
+    counts decrease with rising `le`, or whose `le="+Inf"` bucket
+    disagrees with its `_count`.
+  * Chrome trace: not valid JSON, no `traceEvents` list, an event
+    missing `name`/`ph`/`ts`/`pid`/`tid`, or unbalanced B/E span pairs.
+
+The checker is deliberately dependency-free (stdlib only) so the CI job
+needs nothing beyond the repo itself.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+TERMINAL_EVENTS = ("job.harvested", "job.cancelled", "job.failed",
+                   "job.cache_hit")
+# `trace` is deliberately NOT here: pool-lifecycle spans (pool.build,
+# pool.step, ...) are process-scoped and carry no trace id; job.* events
+# must carry one, enforced below
+EVENT_FIELDS = ("name", "kind", "ts", "wall", "attrs")
+KINDS = ("instant", "begin", "end")
+
+# `name{labels} value` / `name value` -- exposition format 0.0.4
+_SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(-?[0-9.eE+-]+|[+-]Inf|NaN)$')
+_LE_RE = re.compile(r'le="([^"]+)"')
+
+
+def check_trace(path: str, expect_jobs: int = None) -> List[str]:
+    errors: List[str] = []
+    submits: Dict[str, int] = defaultdict(int)
+    terminals: Dict[str, List[str]] = defaultdict(list)
+    n = 0
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            n += 1
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{path}:{i}: not JSON ({e})")
+                continue
+            if not isinstance(ev, dict):
+                errors.append(f"{path}:{i}: not a JSON object")
+                continue
+            missing = [k for k in EVENT_FIELDS if k not in ev]
+            if missing:
+                errors.append(f"{path}:{i}: missing fields {missing}")
+                continue
+            if ev["kind"] not in KINDS:
+                errors.append(f"{path}:{i}: unknown kind {ev['kind']!r}")
+            tid = ev.get("trace")
+            if ev["name"].startswith("job.") and tid is None:
+                errors.append(f"{path}:{i}: {ev['name']} without a "
+                              "trace id")
+                continue
+            if ev["name"] == "job.submit":
+                submits[tid] += 1
+            elif ev["name"] in TERMINAL_EVENTS:
+                terminals[tid].append(ev["name"])
+    if n == 0:
+        errors.append(f"{path}: empty trace")
+    for tid, k in submits.items():
+        if k != 1:
+            errors.append(f"trace {tid}: {k} job.submit events (want 1)")
+        got = terminals.get(tid, [])
+        if len(got) != 1:
+            errors.append(f"trace {tid}: terminal events {got} "
+                          "(want exactly one)")
+    for tid, got in terminals.items():
+        if tid not in submits:
+            errors.append(f"trace {tid}: terminal {got} with no "
+                          "job.submit")
+    if expect_jobs is not None and len(submits) != expect_jobs:
+        errors.append(f"{path}: {len(submits)} submitted jobs "
+                      f"(expected {expect_jobs})")
+    if not errors:
+        print(f"ok: {path}: {n} events, {len(submits)} jobs, every job "
+              "reconciles (1 submit + 1 terminal)")
+    return errors
+
+
+def check_metrics(path: str) -> List[str]:
+    errors: List[str] = []
+    typed: Dict[str, str] = {}           # metric family -> TYPE
+    helped = set()
+    # histogram family -> label-set-sans-le -> [(le, cum)], _count map
+    buckets: Dict[str, Dict[str, list]] = defaultdict(
+        lambda: defaultdict(list))
+    counts: Dict[str, Dict[str, float]] = defaultdict(dict)
+    n_samples = 0
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            if line.startswith("# HELP "):
+                helped.add(line.split()[2])
+                continue
+            if line.startswith("# TYPE "):
+                parts = line.split()
+                typed[parts[2]] = parts[3]
+                continue
+            if line.startswith("#"):
+                continue
+            m = _SAMPLE_RE.match(line)
+            if not m:
+                errors.append(f"{path}:{i}: unparseable sample {line!r}")
+                continue
+            n_samples += 1
+            name, labels, value = m.group(1), m.group(2) or "", m.group(3)
+            base = re.sub(r"_(bucket|sum|count)$", "", name)
+            if base not in typed:
+                errors.append(f"{path}:{i}: sample {name!r} has no "
+                              "# TYPE line")
+            elif base not in helped:
+                errors.append(f"{path}:{i}: sample {name!r} has no "
+                              "# HELP line")
+            if typed.get(base) == "histogram":
+                key = _LE_RE.sub("", labels)
+                if name.endswith("_bucket"):
+                    le = _LE_RE.search(labels)
+                    if le is None:
+                        errors.append(f"{path}:{i}: bucket without le=")
+                        continue
+                    bound = (float("inf") if le.group(1) == "+Inf"
+                             else float(le.group(1)))
+                    buckets[base][key].append((bound, float(value)))
+                elif name.endswith("_count"):
+                    counts[base][key] = float(value)
+    if n_samples == 0:
+        errors.append(f"{path}: no samples")
+    for fam, series in buckets.items():
+        for key, bs in series.items():
+            bs.sort()
+            cums = [c for _, c in bs]
+            if any(b > a for a, b in zip(cums[1:], cums)):
+                errors.append(f"{fam}{key}: cumulative buckets decrease: "
+                              f"{cums}")
+            if bs and bs[-1][0] != float("inf"):
+                errors.append(f"{fam}{key}: no le=+Inf bucket")
+            cnt = counts.get(fam, {}).get(key)
+            if bs and cnt is not None and bs[-1][1] != cnt:
+                errors.append(f"{fam}{key}: +Inf bucket {bs[-1][1]} != "
+                              f"_count {cnt}")
+    if not errors:
+        print(f"ok: {path}: {n_samples} samples, {len(typed)} families, "
+              f"{len(buckets)} histogram(s) well-formed")
+    return errors
+
+
+def check_chrome(path: str) -> List[str]:
+    errors: List[str] = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable chrome trace ({e})"]
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return [f"{path}: no traceEvents list"]
+    depth: Dict[tuple, int] = defaultdict(int)
+    for j, ev in enumerate(evs):
+        for k in ("name", "ph", "ts", "pid", "tid"):
+            if k not in ev:
+                errors.append(f"{path}: event {j} missing {k!r}")
+        if ev.get("ph") == "B":
+            depth[(ev.get("pid"), ev.get("tid"))] += 1
+        elif ev.get("ph") == "E":
+            key = (ev.get("pid"), ev.get("tid"))
+            depth[key] -= 1
+            if depth[key] < 0:
+                errors.append(f"{path}: event {j}: E with no open B on "
+                              f"tid {ev.get('tid')}")
+    open_spans = {k: v for k, v in depth.items() if v > 0}
+    if open_spans:
+        errors.append(f"{path}: unbalanced B/E pairs left open: "
+                      f"{open_spans}")
+    if not errors:
+        print(f"ok: {path}: {len(evs)} events, spans balanced")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="JSONL",
+                    help="structured-trace JSONL (serve.tracing sink)")
+    ap.add_argument("--metrics", default=None, metavar="TXT",
+                    help="Prometheus text exposition dump")
+    ap.add_argument("--chrome", default=None, metavar="JSON",
+                    help="Chrome trace export")
+    ap.add_argument("--expect-jobs", type=int, default=None, metavar="N",
+                    help="with --trace, require exactly N submitted jobs")
+    args = ap.parse_args()
+    if not (args.trace or args.metrics or args.chrome):
+        ap.error("give at least one of --trace / --metrics / --chrome")
+    errors: List[str] = []
+    if args.trace:
+        errors += check_trace(args.trace, args.expect_jobs)
+    if args.metrics:
+        errors += check_metrics(args.metrics)
+    if args.chrome:
+        errors += check_chrome(args.chrome)
+    for err in errors:
+        print(f"FAIL: {err}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

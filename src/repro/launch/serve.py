@@ -38,6 +38,17 @@ restarted launcher deserializes its pool programs instead of recompiling;
 store-predicted pools (`--cache-path` traffic) build off-thread before
 their first job, and autoscale ladder sizes pre-compile before `grow()`.
 
+Observability flags (`runtime.telemetry` / `serve.tracing`):
+`--metrics-port N` serves Prometheus text exposition on a stdlib HTTP
+server at `/metrics` (0 = ephemeral port, printed at startup);
+`--trace-file P` enables structured tracing with a JSONL event sink
+(also honoured via the `REPRO_TRACE_FILE` environment variable, and
+`REPRO_TELEMETRY=1` enables tracing without a sink); `--chrome-trace P`
+writes a Perfetto-loadable Chrome trace of every span at exit;
+`--metrics-dump P` scrapes the process's own `/metrics` endpoint at exit
+and writes the exposition body (CI-friendly with `--metrics-port 0`);
+`--profile-dir D` wraps the workload in a `jax.profiler` trace window.
+
 `--frontend` serves the workload through the asyncio front-end
 (`serve.frontend.PlacementFrontend`): one concurrent client task per
 request submits a `serve.api.JobRequest` and awaits its `JobHandle`,
@@ -48,6 +59,62 @@ front-end owns the stepping thread over the same scheduler.
 """
 import argparse
 import os
+
+
+def _telemetry_setup(args):
+    """Start the flagged exporters; returns a finalizer to run at exit.
+
+    Order matters: tracing is enabled before any pool/scheduler is built
+    so pool.build spans and job.submit events are captured from the first
+    request.  The finalizer flushes file sinks and writes the one-shot
+    exports (--chrome-trace, --metrics-dump) after the workload is done.
+    """
+    from repro.runtime import telemetry
+    from repro.serve import tracing
+
+    if args.trace_file or args.chrome_trace:
+        # a chrome-trace export needs the in-memory span ring even when no
+        # JSONL sink was requested
+        tracing.enable(jsonl_path=args.trace_file)
+    else:
+        tracing.maybe_enable_from_env()
+
+    metrics_url = None
+    if args.metrics_port is not None:
+        _, port = telemetry.start_http_server(args.metrics_port)
+        metrics_url = f"http://127.0.0.1:{port}/metrics"
+        print(f"metrics: {metrics_url}")
+
+    profiling = False
+    if args.profile_dir:
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
+        profiling = True
+
+    def finalize():
+        if profiling:
+            import jax
+            jax.profiler.stop_trace()
+            print(f"jax profile: {args.profile_dir}")
+        if args.chrome_trace:
+            tracing.write_chrome_trace(args.chrome_trace)
+            print(f"chrome trace: {args.chrome_trace}")
+        if args.metrics_dump:
+            # scrape our own endpoint so the dump exercises the HTTP
+            # exporter end to end (exposition headers included via GET)
+            if metrics_url is not None:
+                import urllib.request
+                with urllib.request.urlopen(metrics_url, timeout=10) as r:
+                    body = r.read().decode("utf-8")
+            else:
+                body = telemetry.registry().prometheus_text()
+            with open(args.metrics_dump, "w", encoding="utf-8") as f:
+                f.write(body)
+            print(f"metrics dump: {args.metrics_dump}")
+        if tracing.enabled():
+            tracing.tracer().close_sinks()
+
+    return finalize
 
 
 def _island_config(args):
@@ -355,6 +422,25 @@ def main():
                     help="background AOT pool compiler (serve.prewarm): "
                          "store-predicted pools and autoscale ladder sizes "
                          "compile off the stepping loop")
+    # observability flags (runtime.telemetry / serve.tracing)
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve Prometheus text exposition at "
+                         "http://127.0.0.1:N/metrics (0 = pick an "
+                         "ephemeral port, printed at startup)")
+    ap.add_argument("--trace-file", default=None, metavar="JSONL",
+                    help="enable structured tracing (serve.tracing) with "
+                         "a JSONL event sink at this path; also honoured "
+                         "via the REPRO_TRACE_FILE environment variable")
+    ap.add_argument("--chrome-trace", default=None, metavar="JSON",
+                    help="write a Perfetto-loadable Chrome trace of all "
+                         "spans at exit (implies tracing on)")
+    ap.add_argument("--metrics-dump", default=None, metavar="TXT",
+                    help="at exit, scrape this process's own /metrics "
+                         "endpoint (or render the registry directly when "
+                         "--metrics-port is absent) and write the body")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="wrap the workload in a jax.profiler trace "
+                         "window written under this directory")
     # async front-end flags (route through serve.frontend)
     ap.add_argument("--frontend", action="store_true",
                     help="serve through the asyncio front-end "
@@ -374,13 +460,17 @@ def main():
         if enabled:
             print(f"persistent compilation cache: {enabled} "
                   f"({compile_cache.cache_salt()})")
-        if args.frontend:
-            frontend_main(args)
-        elif (args.cache or args.cache_path or args.autoscale
-              or args.prewarm or args.policy != "round_robin"):
-            control_plane_main(args)
-        else:
-            placement_main(args)
+        finalize = _telemetry_setup(args)
+        try:
+            if args.frontend:
+                frontend_main(args)
+            elif (args.cache or args.cache_path or args.autoscale
+                  or args.prewarm or args.policy != "round_robin"):
+                control_plane_main(args)
+            else:
+                placement_main(args)
+        finally:
+            finalize()
         return
     if args.arch is None:
         ap.error("--arch is required unless --placement is given")

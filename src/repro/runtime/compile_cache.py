@@ -169,6 +169,30 @@ class CompileMeter:
                 "persistent_cache_dir": enabled_dir(),
             }
 
+    def telemetry_samples(self):
+        """The meter as `(name, kind, help, value)` rows for the metrics
+        registry's collect walk (`runtime.telemetry` registers a collector
+        over this), so compile counters land in the same Prometheus scrape
+        as job counters instead of living in a side dict."""
+        with self._lock:
+            return [
+                ("repro_compiles_total", "counter",
+                 "Backend compile requests (cache-served included)",
+                 float(self.compiles)),
+                ("repro_recompiles_total", "counter",
+                 "Real XLA compiles (requests not answered by the "
+                 "persistent cache)", float(self.recompiles)),
+                ("repro_compile_seconds_total", "counter",
+                 "Wall seconds inside backend compile requests",
+                 round(self.compile_secs, 6)),
+                ("repro_compile_cache_hits_total", "counter",
+                 "Persistent compilation cache hits",
+                 float(self.cache_hits)),
+                ("repro_compile_cache_misses_total", "counter",
+                 "Persistent compilation cache misses",
+                 float(self.cache_misses)),
+            ]
+
 
 _METER = CompileMeter()
 

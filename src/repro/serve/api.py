@@ -46,8 +46,24 @@ from typing import TypedDict
 from repro.core.islands import IslandConfig
 
 # bump when a stats key is renamed or changes meaning; ADDING keys is the
-# normal append-only path and does not bump the version
-STATS_SCHEMA_VERSION = 1
+# normal append-only path and does not bump the version.
+# v1 -> v2 (observability PR): no key was renamed or removed -- v2 marks
+# the point where every layer's stats() carries the telemetry keys
+# (latency histograms, convergence tails) and where the previously
+# unversioned Prewarmer/ChampionStore dicts joined the versioned schema
+# via `stats_payload()`.  v1 readers keep working on every old key.
+STATS_SCHEMA_VERSION = 2
+
+
+def stats_payload(**keys: Any) -> Dict[str, Any]:
+    """The one way a serve-layer `stats()` builds its dict: stamps
+    `schema_version` as the first key so the five builders
+    (service/scheduler/frontend/prewarmer/champion store) cannot drift
+    apart on the envelope.  Keys stay append-only per the bench contract.
+    """
+    out: Dict[str, Any] = {"schema_version": STATS_SCHEMA_VERSION}
+    out.update(keys)
+    return out
 
 
 class JobStatus(enum.Enum):
@@ -116,6 +132,10 @@ class JobRequest:
     gens_per_step: Optional[int] = None
     jitter: float = 0.15
     sigma_shrink: float = 0.25
+    # observability only -- minted by the outermost layer that sees the
+    # request when tracing is enabled; NOT part of the purity tuple (two
+    # requests differing only in trace_id produce bitwise the same result)
+    trace_id: Optional[str] = None
 
     def replace(self, **kw: Any) -> "JobRequest":
         return dataclasses.replace(self, **kw)
@@ -148,7 +168,12 @@ class ProgressUpdate:
 
     `best_objs` is the (wl^2, max bbox) objective vector of the job's
     current champion; `eta_s` extrapolates remaining wallclock from the
-    generations already served (None until the first boundary)."""
+    generations already served (None until the first boundary, None again
+    whenever extrapolation would be garbage -- see
+    `frontend._extrapolate_eta`).  `convergence` is the tail of the job's
+    per-step convergence ring -- `(gens, metric)` pairs recorded at step
+    boundaries -- so a progress consumer can plot the paper's Fig. 7
+    curve live without waiting for the job to finish."""
 
     jid: int
     status: JobStatus
@@ -157,6 +182,28 @@ class ProgressUpdate:
     metric: float
     best_objs: Any
     eta_s: Optional[float] = None
+    convergence: Tuple[Tuple[int, float], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTrace:
+    """`JobHandle.trace()`: everything recorded about one job's journey.
+
+    `events` is the job's slice of the process tracer (empty unless
+    tracing was enabled -- `serve.tracing.enabled()`); `convergence` is
+    the full `(gens, metric)` history the handle accumulated from
+    progress pushes (always on; bounded ring).  `phases` folds the
+    begin/end span pairs among the events into `(name, seconds)` tuples.
+    """
+
+    trace_id: Optional[str]
+    events: Tuple[Any, ...]
+    convergence: Tuple[Tuple[int, float], ...]
+
+    @property
+    def phases(self) -> List[Tuple[str, float]]:
+        from repro.serve import tracing
+        return tracing.span_pairs(list(self.events))
 
 
 class JobHandle:
@@ -173,6 +220,10 @@ class JobHandle:
     # progress buffer depth: a slow consumer sees the freshest updates,
     # never an unbounded backlog
     PROGRESS_BUFFER = 64
+    # convergence ring depth: independent of the progress buffer because
+    # trace() must see the whole curve even after progress() consumed the
+    # updates (the deque is drained by iteration, this ring is not)
+    CONVERGENCE_BUFFER = 256
 
     def __init__(self, jid: int, request: JobRequest) -> None:
         self.jid = jid
@@ -184,6 +235,8 @@ class JobHandle:
         self._lock = threading.Lock()
         self._progress: collections.deque = collections.deque(
             maxlen=self.PROGRESS_BUFFER)
+        self._convergence: collections.deque = collections.deque(
+            maxlen=self.CONVERGENCE_BUFFER)
         self._cancel_fn = None             # installed by the serving layer
         # async plumbing (installed by serve.frontend when it owns the
         # handle): loop + event woken on every state/progress change
@@ -219,6 +272,18 @@ class JobHandle:
             raise TimeoutError(
                 f"job {self.jid} not finished within {timeout}s")
         return self._exception
+
+    def trace(self) -> JobTrace:
+        """Everything recorded about this job: its tracer events (when
+        tracing is enabled) and its convergence curve (always).  Valid at
+        any point in the lifecycle; after a terminal event it is the
+        job's complete history."""
+        from repro.serve import tracing
+        tid = self.request.trace_id if self.request is not None else None
+        events = tuple(tracing.tracer().events(tid)) if tid else ()
+        with self._lock:
+            conv = tuple(self._convergence)
+        return JobTrace(trace_id=tid, events=events, convergence=conv)
 
     def cancel(self) -> bool:
         """Request cancellation: the slot is freed at the next step
@@ -290,6 +355,11 @@ class JobHandle:
     def _push_progress(self, update: ProgressUpdate) -> None:
         with self._lock:
             self._progress.append(update)
+            # accumulate the convergence curve separately: progress() is a
+            # consuming iterator, trace() wants the whole history
+            if (not self._convergence
+                    or self._convergence[-1][0] != update.gens):
+                self._convergence.append((update.gens, update.metric))
         self._wake()
 
     def _resolve(self, result: Any) -> None:
@@ -370,6 +440,10 @@ class ServiceStats(TypedDict):
     recompiles_total: int
     compile_secs_total: float
     persistent_cache_dir: Optional[str]
+    # --- appended under schema_version 2 (observability) ---
+    step_ms_hist: Dict[str, Any]       # Histogram.to_dict() of step wall ms
+    convergence: Dict[str, Any]        # jid -> tail of (gens, metric) ring
+    tracing_enabled: bool
 
 
 class FleetStats(TypedDict):
@@ -385,6 +459,8 @@ class FleetStats(TypedDict):
     policy: str
     autoscale_events: List[Tuple[str, int, int]]
     pools: Dict[str, Any]      # label -> ServiceStats + queue_depth
+    # --- appended under schema_version 2 (observability) ---
+    job_latency_ms_hist: Dict[str, Any]  # submit -> terminal wall ms
     # optional sections (present when the feature is attached):
     #   cache: ChampionStore.stats()      prewarm: Prewarmer.stats()
 
@@ -404,3 +480,6 @@ class FrontendStats(TypedDict):
     queue_full_rejections: int  # submit_nowait calls that raised QueueFull
     draining: bool
     fleet: Any                 # FleetStats of the owned scheduler
+    # --- appended under schema_version 2 (observability) ---
+    job_latency_ms_hist: Dict[str, Any]  # async submit -> terminal wall ms
+    tracing_enabled: bool

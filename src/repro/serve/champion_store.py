@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import transfer
 from repro.fpga.netlist import Problem
+from repro.serve import api
 
 # genotype leaf dtypes, by tier (JSON carries nested lists; dtypes restore
 # the exact arrays `PlacementService.submit(init_state=...)` expects)
@@ -290,11 +291,11 @@ class ChampionStore:
         return sorted(self._by_sig.values(), key=lambda e: e.signature)
 
     def stats(self) -> Dict[str, Any]:
-        return {
-            "n_entries": len(self._by_sig),
-            "hits_exact": self.hits_exact,
-            "hits_sibling": self.hits_sibling,
-            "misses": self.misses,
-            "puts": self.puts,
-            "improvements": self.improvements,
-        }
+        return api.stats_payload(
+            n_entries=len(self._by_sig),
+            hits_exact=self.hits_exact,
+            hits_sibling=self.hits_sibling,
+            misses=self.misses,
+            puts=self.puts,
+            improvements=self.improvements,
+        )

@@ -57,16 +57,46 @@ from __future__ import annotations
 import asyncio
 import collections
 import dataclasses
+import math
 import threading
 import time
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
-from repro.serve import api
+from repro.runtime import telemetry
+from repro.serve import api, tracing
 from repro.serve.api import (FrontendStats, JobFailedError, JobHandle,
                              JobRequest, QueueFull)
 from repro.serve.scheduler import PlacementScheduler
 
 __all__ = ["PlacementFrontend"]
+
+# same registry instrument the scheduler records into, under its own
+# layer label (frontend latency = async submit -> terminal, the
+# end-to-end number a client actually experiences)
+_M_LATENCY = telemetry.registry().histogram(
+    "repro_job_latency_ms", "Submit -> terminal wall ms, per layer",
+    buckets=telemetry.DEFAULT_LATENCY_BUCKETS_MS)
+
+
+def _extrapolate_eta(gens: int, budget: int, elapsed: float,
+                     metric: Optional[float] = None) -> Optional[float]:
+    """Remaining-wallclock estimate from a job's own generation
+    throughput, or None whenever extrapolation would be garbage:
+
+      * no generations served yet (`gens <= 0`) -- nothing to extrapolate,
+      * elapsed time ~0 (first boundary landing within clock resolution)
+        -- per-gen rate would divide by ~zero and explode,
+      * the metric is not finite yet (no evaluated champion, so the job
+        has not measurably progressed) -- an ETA would suggest progress
+        that has not happened.
+
+    Never negative: a job past its (quantized-up) budget reads 0.0.
+    """
+    if gens <= 0 or elapsed <= 1e-6:
+        return None
+    if metric is not None and not math.isfinite(metric):
+        return None
+    return max(elapsed / gens * (budget - gens), 0.0)
 
 
 class PlacementFrontend:
@@ -112,6 +142,10 @@ class PlacementFrontend:
         self.failed = 0
         self.backpressure_waits = 0
         self.queue_full_rejections = 0
+        # end-to-end submit -> terminal latency (stats(); mirrors into
+        # the registry histogram under layer="frontend")
+        self._latency_hist = telemetry.Histogram(
+            "job_latency_ms", buckets=telemetry.DEFAULT_LATENCY_BUCKETS_MS)
 
     # -------------------------------------------------------- lifecycle
 
@@ -232,7 +266,17 @@ class PlacementFrontend:
         self._credits += 1
 
     def _enqueue_submit(self, request: JobRequest) -> JobHandle:
+        if tracing.enabled() and request.trace_id is None:
+            # the front-end is the outermost layer: mint here so the
+            # whole journey -- including queueing behind the command
+            # deque -- lands on one trace
+            request = request.replace(trace_id=tracing.new_trace_id())
+            tracing.tracer().instant("job.submit", request.trace_id,
+                                     device=request.device,
+                                     budget=request.budget,
+                                     layer="frontend")
         handle = JobHandle(jid=-1, request=request)
+        handle._t_submit = time.monotonic()
         handle._attach_async(self._loop, asyncio.Event())
         handle._cancel_fn = lambda _jid, h=handle: self._request_cancel(h)
         self.submitted += 1
@@ -243,9 +287,17 @@ class PlacementFrontend:
                 self._commands.append(("submit", handle))
                 self._cv.notify_all()
         if stopped:                        # thread already gone: fail
+            # stats (counter + latency) and trace event land BEFORE the
+            # handle resolves: a caller woken by the resolve must already
+            # see a consistent stats()/trace view
+            self.failed += 1
+            self._observe_terminal_latency(handle)
+            if tracing.enabled() and request.trace_id is not None:
+                tracing.tracer().instant(
+                    "job.failed", request.trace_id,
+                    error="front-end stepping thread stopped")
             handle._fail(JobFailedError(   # loudly instead of hanging
                 "front-end stepping thread stopped"))
-            self.failed += 1
             self._on_terminal()
         return handle
 
@@ -294,7 +346,14 @@ class PlacementFrontend:
         except Exception as e:  # noqa: BLE001 -- bad request: fail the
             # handle, not the thread (co-tenant jobs keep flowing)
             self.failed += 1
-            handle._fail(e)
+            self._observe_terminal_latency(handle)
+            if tracing.enabled() and handle.request.trace_id is not None:
+                # the scheduler raised before emitting anything for this
+                # trace; the terminal event is ours to write
+                tracing.tracer().instant(
+                    "job.failed", handle.request.trace_id,
+                    error=f"{type(e).__name__}: {e}")
+            handle._fail(e)                # resolve last: see _do_step
             self._notify_terminal(handle)
             return
         handle.jid = jid
@@ -306,8 +365,10 @@ class PlacementFrontend:
         if handle not in self._live:
             return                         # already terminal (or failed)
         if self.scheduler.cancel(handle.jid):
+            # the scheduler (or its pool) emitted the job.cancelled event
             self.cancelled += 1
-            handle._cancelled()
+            self._observe_terminal_latency(handle)
+            handle._cancelled()            # resolve last: see _do_step
             self._forget(handle)
             self._notify_terminal(handle)
         # else: finished in the same breath; resolves via _do_step
@@ -317,8 +378,12 @@ class PlacementFrontend:
             handle = self._by_jid.get(job.jid)
             if handle is None:
                 continue                   # not ours (direct submitter)
-            # counters first, then resolve: a caller woken by the resolve
-            # must already see consistent stats()
+            # counters AND the latency observation first, then resolve: a
+            # caller woken by the resolve must already see consistent
+            # stats() -- including the histogram.  Terminal trace events
+            # (harvested / cache_hit / failed) were emitted by the layer
+            # that decided the outcome -- the pool or the scheduler.
+            self._observe_terminal_latency(handle)
             if job.status is api.JobStatus.DONE:
                 self.completed += 1
                 handle._resolve(job.result)
@@ -335,10 +400,7 @@ class PlacementFrontend:
                 continue
             handle._mark_running()
             t0 = self._first_seen.setdefault(u.jid, now)
-            eta = None
-            if u.gens > 0 and now > t0:
-                per_gen = (now - t0) / u.gens
-                eta = per_gen * max(u.budget - u.gens, 0)
+            eta = _extrapolate_eta(u.gens, u.budget, now - t0, u.metric)
             handle._push_progress(dataclasses.replace(u, eta_s=eta))
 
     def _forget(self, handle: JobHandle) -> None:
@@ -371,24 +433,44 @@ class PlacementFrontend:
         for handle in list(self._live) + leftovers:
             if not handle._done.is_set():
                 self.failed += 1
-                handle._fail(JobFailedError(note))
+                self._observe_terminal_latency(handle)
+                if (tracing.enabled()
+                        and handle.request.trace_id is not None):
+                    # the scheduler will never step again, so no other
+                    # layer can write this job's terminal event
+                    tracing.tracer().instant(
+                        "job.failed", handle.request.trace_id, error=note)
+                handle._fail(JobFailedError(note))   # resolve last
                 self._notify_terminal(handle)
         self._live.clear()
         self._by_jid.clear()
 
+    def _observe_terminal_latency(self, handle: JobHandle) -> None:
+        """Record async submit -> terminal latency exactly once per
+        handle (`_t_submit` is zeroed after observing)."""
+        t0 = getattr(handle, "_t_submit", 0.0)
+        if not t0:
+            return
+        handle._t_submit = 0.0
+        ms = (time.monotonic() - t0) * 1e3
+        self._latency_hist.observe(ms)
+        _M_LATENCY.observe(ms, layer="frontend")
+
     # ------------------------------------------------------------ stats
 
     def stats(self) -> FrontendStats:
-        return {
-            "schema_version": api.STATS_SCHEMA_VERSION,
-            "max_queue": self.max_queue,
-            "submitted": self.submitted,
-            "admitted": self.admitted,
-            "completed": self.completed,
-            "cancelled": self.cancelled,
-            "failed": self.failed,
-            "backpressure_waits": self.backpressure_waits,
-            "queue_full_rejections": self.queue_full_rejections,
-            "draining": self._draining,
-            "fleet": self.scheduler.stats(),
-        }
+        return api.stats_payload(
+            max_queue=self.max_queue,
+            submitted=self.submitted,
+            admitted=self.admitted,
+            completed=self.completed,
+            cancelled=self.cancelled,
+            failed=self.failed,
+            backpressure_waits=self.backpressure_waits,
+            queue_full_rejections=self.queue_full_rejections,
+            draining=self._draining,
+            fleet=self.scheduler.stats(),
+            # --- appended under schema_version 2 (observability) ---
+            job_latency_ms_hist=self._latency_hist.to_dict(),
+            tracing_enabled=tracing.enabled(),
+        )

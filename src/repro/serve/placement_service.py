@@ -52,9 +52,11 @@ the other islands via migration.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import functools
+import itertools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -67,9 +69,35 @@ from repro.core import islands as islands_mod
 from repro.core import objectives as O
 from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
-from repro.runtime import compile_cache
-from repro.serve import api
+from repro.runtime import compile_cache, telemetry
+from repro.serve import api, tracing
 from repro.serve.api import JobRequest, ServiceStats
+
+# registry-global instruments (recording is host-side arithmetic, cheap
+# next to a jitted step; exporters are what the config flags gate)
+_REG = telemetry.registry()
+_M_STEPS = _REG.counter(
+    "repro_service_steps_total", "Batched service step() calls")
+_M_GENS = _REG.counter(
+    "repro_useful_gens_total", "Active-slot generations actually served")
+_M_HARVESTED = _REG.counter(
+    "repro_jobs_harvested_total", "Jobs harvested at budget/target")
+_M_CANCELLED = _REG.counter(
+    "repro_jobs_cancelled_total", "In-flight slots freed early by cancel()")
+_M_STEP_MS = _REG.histogram(
+    "repro_service_step_ms", "Wall ms per batched service step",
+    buckets=telemetry.DEFAULT_LATENCY_BUCKETS_MS)
+_M_BEST = _REG.gauge(
+    "repro_pool_best_metric",
+    "Best combined metric across a pool's active slots (live convergence)")
+
+# per-job convergence ring depth: (gens, metric) pairs at step boundaries
+CONVERGENCE_RING = 256
+# tail length surfaced through ProgressUpdate / stats() (the full ring
+# stays on the job and on JobHandle.trace())
+CONVERGENCE_TAIL = 8
+
+_POOL_COUNTER = itertools.count(1)
 
 
 def make_job_specs(n: int, pop_size: int, budget: int, seed: int = 0,
@@ -108,6 +136,12 @@ class PlacementJob:
     best_objs: Optional[np.ndarray] = None   # [2] = (wl^2, max bbox)
     metric: float = float("inf")             # combined metric of best_objs
     genotype: Any = None                     # best full genotype at harvest
+    trace_id: Optional[str] = None           # observability only
+    # per-step convergence ring: (gens, metric) recorded at every step
+    # boundary the job was alive for -- the paper's Fig. 7 curve as a
+    # live signal (bounded; never read by jitted code)
+    history: Any = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=CONVERGENCE_RING))
 
 
 class PlacementService:
@@ -115,9 +149,17 @@ class PlacementService:
 
     def __init__(self, problem: Problem, base_cfg, algo: str = "nsga2",
                  n_slots: int = 8, gens_per_step: int = 4, seed: int = 0,
-                 islands: Optional[IslandConfig] = None):
+                 islands: Optional[IslandConfig] = None,
+                 label: Optional[str] = None):
         self.problem, self.algo = problem, algo
         self.n_slots, self.gens_per_step = n_slots, gens_per_step
+        # observability-only pool name (metric label / span attr); the
+        # scheduler passes its pool-signature label, standalone pools get
+        # a process-unique default
+        self.label = label or f"pool{next(_POOL_COUNTER)}/{algo}"
+        if tracing.enabled():
+            tracing.tracer().begin("pool.build", pool=self.label,
+                                   n_slots=n_slots, algo=algo)
         # island topology is static pool identity, exactly like pop_size:
         # P > 1 swaps the slot programs for their island-stacked mirrors
         # (`core.islands`); P == 1 keeps the original single-population
@@ -205,10 +247,18 @@ class PlacementService:
 
         # fill the pool with throwaway states so step() shapes exist from
         # the first call (vacant slots evolve garbage; it is never read)
+        # per-pool step-latency histogram (the registry-global one
+        # aggregates across pools; this instance feeds stats())
+        self._step_hist = telemetry.Histogram(
+            "step_ms", buckets=telemetry.DEFAULT_LATENCY_BUCKETS_MS)
+
         k_fill = jax.random.fold_in(self.key, 0x5eed)
         with self._blocking():
             self.states = self._fill_fn(self._traced_dev(),
                                         jax.random.split(k_fill, n_slots))
+        if tracing.enabled():
+            tracing.tracer().end("pool.build", pool=self.label,
+                                 n_slots=n_slots, algo=algo)
 
     @contextlib.contextmanager
     def _blocking(self):
@@ -297,9 +347,21 @@ class PlacementService:
             return None
         slot = int(free[0])
         seed = self.next_jid if seed is None else seed
+        trace_id = request.trace_id
+        if tracing.enabled() and trace_id is None:
+            # direct pool submission (no scheduler/front-end above us):
+            # this layer is the outermost, so it mints and announces
+            trace_id = tracing.new_trace_id()
+            tracing.tracer().instant("job.submit", trace_id,
+                                     algo=self.algo, budget=budget)
         job = PlacementJob(self.next_jid, cfg, seed, budget, target,
-                           slot=slot, warm=init_state is not None)
+                           slot=slot, warm=init_state is not None,
+                           trace_id=trace_id)
         self.next_jid += 1
+        if tracing.enabled():
+            tracing.tracer().instant("job.admitted", trace_id,
+                                     slot=slot, pool=self.label,
+                                     warm=job.warm)
         traced_dev = {k: jnp.float32(v) for k, v in traced.items()}
         with self._blocking():
             if init_state is None:
@@ -344,6 +406,11 @@ class PlacementService:
                 self.active[slot] = False
                 self.slot_job[slot] = None
                 self.jobs_cancelled += 1
+                _M_CANCELLED.inc()
+                if tracing.enabled():
+                    tracing.tracer().instant(
+                        "job.cancelled", job.trace_id,
+                        slot=int(slot), gens=job.gens)
                 return True
         return False
 
@@ -382,6 +449,10 @@ class PlacementService:
         if n_slots <= self.n_slots:
             raise ValueError(
                 f"grow() only grows: {n_slots} <= current {self.n_slots}")
+        if tracing.enabled():
+            tracing.tracer().begin("pool.grow", pool=self.label,
+                                   from_slots=self.n_slots,
+                                   to_slots=n_slots)
         extra = n_slots - self.n_slots
         k_fill = jax.random.fold_in(self.key, 0x5eed + n_slots)
         fill_traced = {k: jnp.full((extra,), v, jnp.float32)
@@ -405,6 +476,9 @@ class PlacementService:
             [self.slot_gens, np.zeros(extra, np.int32)])
         self.n_slots = n_slots
         self.size_history.append(n_slots)
+        if tracing.enabled():
+            tracing.tracer().end("pool.grow", pool=self.label,
+                                 to_slots=n_slots)
 
     # ----------------------------------------------------------- prewarm
 
@@ -426,6 +500,9 @@ class PlacementService:
         base, states = self.n_slots, self.states   # snapshot
         if n_slots <= base or n_slots in self._prewarmed_sizes:
             return False
+        if tracing.enabled():
+            tracing.tracer().begin("pool.prewarm_size", pool=self.label,
+                                   n_slots=n_slots)
         extra = n_slots - base
         with self._meter.measure() as m:
             k_fill = jax.random.fold_in(self.key, 0x9ae + n_slots)
@@ -448,6 +525,9 @@ class PlacementService:
         self._prewarmed_sizes.add(n_slots)
         self.prewarm_compiles += m.compiles
         self.prewarm_compile_secs += m.secs
+        if tracing.enabled():
+            tracing.tracer().end("pool.prewarm_size", pool=self.label,
+                                 n_slots=n_slots, compiles=m.compiles)
         return True
 
     # -------------------------------------------------------------- step
@@ -471,6 +551,12 @@ class PlacementService:
         call; harvest and return newly finished jobs."""
         if not self.active.any():
             return []
+        n_active = int(self.active.sum())
+        traced_on = tracing.enabled()
+        if traced_on:
+            tracing.tracer().begin("pool.step", pool=self.label,
+                                   active=n_active)
+        t_step = time.perf_counter()
         # jnp.array copies: the numpy mirrors are mutated in place below
         # and by submit(), and CPU jax may otherwise alias their buffers
         # while the dispatched step is still consuming them
@@ -490,17 +576,38 @@ class PlacementService:
             self._first_gen_ms = (time.perf_counter()
                                   - self._created_at) * 1e3
         finished = []
+        best_active = float("inf")
         for slot in np.where(self.active)[0]:
             job = self.slot_job[slot]
             job.gens += self.gens_per_step
             job.best_objs = best[slot]
             job.metric = float(metric[slot])
+            # live convergence: one (gens, metric) point per step boundary
+            job.history.append((job.gens, job.metric))
+            best_active = min(best_active, job.metric)
             hit_target = job.target is not None and job.metric <= job.target
             if job.gens >= job.budget or hit_target:
                 self._harvest(slot, job)
                 finished.append(job)
                 self.active[slot] = False
                 self.slot_job[slot] = None
+                _M_HARVESTED.inc()
+                if traced_on:
+                    tracing.tracer().instant(
+                        "job.harvested", job.trace_id, slot=int(slot),
+                        gens=job.gens, metric=job.metric,
+                        hit_target=hit_target)
+        step_ms = (time.perf_counter() - t_step) * 1e3
+        self._step_hist.observe(step_ms)
+        _M_STEP_MS.observe(step_ms)
+        _M_STEPS.inc()
+        _M_GENS.inc(int(self.active.sum() + len(finished))
+                    * self.gens_per_step)
+        if best_active != float("inf"):
+            _M_BEST.set(best_active, pool=self.label)
+        if traced_on:
+            tracing.tracer().end("pool.step", pool=self.label,
+                                 harvested=len(finished))
         return finished
 
     def _harvest(self, slot: int, job: PlacementJob) -> None:
@@ -547,29 +654,34 @@ class PlacementService:
         return done
 
     def stats(self) -> ServiceStats:
-        return {
-            "schema_version": api.STATS_SCHEMA_VERSION,
-            "n_slots": self.n_slots,
-            "gens_per_step": self.gens_per_step,
-            "steps": self.total_steps,
-            "useful_gens": self.useful_gens,
-            "step_compiles": self.step_compiles,
-            "sizes": list(self.size_history),
-            "n_islands": self.islands.n_islands,
-            "migrate_every": self.islands.migrate_every,
-            "jobs_cancelled": self.jobs_cancelled,
+        return api.stats_payload(
+            n_slots=self.n_slots,
+            gens_per_step=self.gens_per_step,
+            steps=self.total_steps,
+            useful_gens=self.useful_gens,
+            step_compiles=self.step_compiles,
+            sizes=list(self.size_history),
+            n_islands=self.islands.n_islands,
+            migrate_every=self.islands.migrate_every,
+            jobs_cancelled=self.jobs_cancelled,
             # compile observability (process meter + this pool's split of
             # blocking vs prewarmed compiles; see runtime.compile_cache)
-            "blocking_compiles": self.blocking_compiles,
-            "blocking_compile_secs": round(self.blocking_compile_secs, 3),
-            "prewarm_compiles": self.prewarm_compiles,
-            "prewarm_compile_secs": round(self.prewarm_compile_secs, 3),
-            "prewarmed_sizes": sorted(self._prewarmed_sizes),
-            "time_to_first_gen_ms": (
+            blocking_compiles=self.blocking_compiles,
+            blocking_compile_secs=round(self.blocking_compile_secs, 3),
+            prewarm_compiles=self.prewarm_compiles,
+            prewarm_compile_secs=round(self.prewarm_compile_secs, 3),
+            prewarmed_sizes=sorted(self._prewarmed_sizes),
+            time_to_first_gen_ms=(
                 None if self._first_gen_ms is None
                 else round(self._first_gen_ms, 1)),
-            "compiles_total": self._meter.compiles,
-            "recompiles_total": self._meter.recompiles,
-            "compile_secs_total": round(self._meter.compile_secs, 3),
-            "persistent_cache_dir": compile_cache.enabled_dir(),
-        }
+            compiles_total=self._meter.compiles,
+            recompiles_total=self._meter.recompiles,
+            compile_secs_total=round(self._meter.compile_secs, 3),
+            persistent_cache_dir=compile_cache.enabled_dir(),
+            # --- appended under schema_version 2 (observability) ---
+            step_ms_hist=self._step_hist.to_dict(),
+            convergence={
+                job.jid: list(job.history)[-CONVERGENCE_TAIL:]
+                for job in self.inflight()},
+            tracing_enabled=tracing.enabled(),
+        )

@@ -35,6 +35,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from repro.serve import api
+
 
 class Prewarmer:
     """Single worker thread executing pool builds / grow prewarms FIFO.
@@ -175,12 +177,12 @@ class Prewarmer:
 
     def stats(self) -> Dict[str, Any]:
         with self._cv:
-            return {
-                "builds_done": self.builds_done,
-                "grows_done": self.grows_done,
-                "adopted": self.adopted,
-                "failures": self.failures,
-                "queued": len(self._tasks),
-                "ready": len(self._ready),
-                "errors": dict(self.errors),
-            }
+            return api.stats_payload(
+                builds_done=self.builds_done,
+                grows_done=self.grows_done,
+                adopted=self.adopted,
+                failures=self.failures,
+                queued=len(self._tasks),
+                ready=len(self._ready),
+                errors=dict(self.errors),
+            )

@@ -41,18 +41,36 @@ bitwise identical to the PR 2 router.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import hyper
 from repro.core.islands import IslandConfig
 from repro.fpga.netlist import Problem
-from repro.serve import api
+from repro.runtime import telemetry
+from repro.serve import api, tracing
 from repro.serve import policy as P
 from repro.serve.api import (FleetStats, JobRequest, JobStatus,
                              ProgressUpdate)
 from repro.serve.champion_store import ChampionStore
-from repro.serve.placement_service import PlacementJob, PlacementService
+from repro.serve.placement_service import (CONVERGENCE_TAIL, PlacementJob,
+                                           PlacementService)
 from repro.serve.prewarm import Prewarmer
+
+_REG = telemetry.registry()
+_M_SUBMITTED = _REG.counter(
+    "repro_jobs_submitted_total", "Jobs submitted to the scheduler")
+_M_CACHE_HITS = _REG.counter(
+    "repro_jobs_cache_hits_total",
+    "Jobs answered instantly from the champion store")
+_M_FAILED = _REG.counter(
+    "repro_jobs_failed_total", "Jobs surfaced as failed")
+_M_CANCELLED_PENDING = _REG.counter(
+    "repro_jobs_cancelled_pending_total",
+    "Pending (never-admitted) jobs cancelled out of the queue")
+_M_LATENCY = _REG.histogram(
+    "repro_job_latency_ms", "Submit -> terminal wall ms, per layer",
+    buckets=telemetry.DEFAULT_LATENCY_BUCKETS_MS)
 
 # (device, algo, static config fields, gens_per_step, island config) --
 # everything that picks a compiled program, so each pool compiles once
@@ -93,6 +111,13 @@ class FleetJob:
     cancelled: bool = False        # cancelled before completion
     error: Optional[str] = None    # last admission-failure note (re-queued)
     attempts: int = 0              # failed admission attempts so far
+    t_submit: float = 0.0          # monotonic submit time (latency hist);
+    #                                zeroed once the terminal latency is
+    #                                observed so a job records exactly once
+
+    @property
+    def trace_id(self) -> Optional[str]:
+        return self.request.trace_id
 
     @property
     def status(self) -> JobStatus:
@@ -174,6 +199,11 @@ class PlacementScheduler:
         self._failed: List[FleetJob] = []      # gave up admitting; drained
         self.next_jid = 0
         self.jobs: Dict[int, FleetJob] = {}
+        # fleet-level submit -> terminal latency (stats(); the registry
+        # histogram aggregates across scheduler instances under a layer
+        # label)
+        self._latency_hist = telemetry.Histogram(
+            "job_latency_ms", buckets=telemetry.DEFAULT_LATENCY_BUCKETS_MS)
 
     # ------------------------------------------------------------ routing
 
@@ -204,13 +234,17 @@ class PlacementScheduler:
             return PlacementService(
                 self.problem(device_name), cfg, algo=algo,
                 n_slots=self.n_slots, gens_per_step=gps,
-                seed=self.seed, islands=icfg)
+                seed=self.seed, islands=icfg,
+                label=self._label(key))
         return build
 
     def _pool(self, key: PoolKey, cfg) -> PlacementService:
         if key not in self._pools:
             svc = (self.prewarmer.take(key)
                    if self.prewarmer is not None else None)
+            if svc is not None and tracing.enabled():
+                tracing.tracer().instant("pool.prewarm_adopt",
+                                         pool=svc.label)
             if svc is None:    # not prewarmed (or its build failed): cold
                 svc = self._builder(key, cfg)()
             self._pools[key] = svc
@@ -337,13 +371,23 @@ class PlacementScheduler:
         cfg = request.resolved_cfg()
         if cfg is not request.cfg:          # fused override applied
             request = request.replace(cfg=cfg, fused=None)
+        traced_on = tracing.enabled()
+        if traced_on and request.trace_id is None:
+            # outermost traced layer for this request: mint + announce
+            # (the front-end mints first when it is above us)
+            request = request.replace(trace_id=tracing.new_trace_id())
+            tracing.tracer().instant("job.submit", request.trace_id,
+                                     device=device, algo=algo,
+                                     budget=request.budget)
         key = self.pool_key(device, algo, cfg, request.gens_per_step,
                             request.islands)
         job = FleetJob(self.next_jid, device, algo, key, request=request,
                        priority=request.priority,
-                       deadline=request.deadline)
+                       deadline=request.deadline,
+                       t_submit=time.monotonic())
         self.next_jid += 1
         self.jobs[job.jid] = job
+        _M_SUBMITTED.inc()
         if self.store is not None:
             problem = self.problem(device)
             # signature-traffic bookkeeping: what `prewarm_predicted`
@@ -352,8 +396,18 @@ class PlacementScheduler:
                 problem, algo=algo,
                 pop_size=getattr(cfg, "pop_size", None))
             if self._consult_store(job, problem):
+                _M_CACHE_HITS.inc()
+                self._observe_terminal(job)    # cache hits are terminal too
+                if traced_on:
+                    tracing.tracer().instant(
+                        "job.cache_hit", job.trace_id,
+                        metric=job.result.metric)
                 return job.jid             # served from cache, zero slots
         self._pool(key, cfg)               # create lazily
+        if traced_on:
+            tracing.tracer().instant("job.queued", job.trace_id,
+                                     pool=self._label(key),
+                                     queue_depth=len(self._pending[key]))
         self._pending[key].append(job)
         if len(self._pending[key]) == 1:   # a waiting head means pool full
             self._admit(key)
@@ -373,8 +427,10 @@ class PlacementScheduler:
             return False
         if job.pool_jid is not None:       # in flight: free the slot
             self._inflight.pop((job.pool_key, job.pool_jid), None)
+            # the pool emits the job.cancelled trace event + counter
             self._pools[job.pool_key].cancel(job.pool_jid)
             job.cancelled = True
+            self._observe_terminal(job)
             self._admit(job.pool_key)      # the freed slot refills now
             return True
         # pending (or cached-but-undrained): pull it out of the queue
@@ -382,6 +438,11 @@ class PlacementScheduler:
         if queue is not None and job in queue:
             queue.remove(job)
             job.cancelled = True
+            self._observe_terminal(job)
+            _M_CANCELLED_PENDING.inc()
+            if tracing.enabled():
+                tracing.tracer().instant("job.cancelled", job.trace_id,
+                                         pending=True)
             return True
         if job in self._cached_done:       # cache hit not yet drained:
             return False                   # already answered, too late
@@ -413,6 +474,11 @@ class PlacementScheduler:
                              f"{type(e).__name__}: {e}")
                 if job.attempts >= self.ADMIT_RETRIES:
                     self._failed.append(job)   # drained by step()
+                    _M_FAILED.inc()
+                    if tracing.enabled():
+                        tracing.tracer().instant(
+                            "job.failed", job.trace_id,
+                            error=job.error, attempts=job.attempts)
                 else:
                     queue.append(job)          # re-queued, not dropped
                 continue
@@ -462,6 +528,16 @@ class PlacementScheduler:
                 jobs=by_pool[key] + pending))
         return views
 
+    def _observe_terminal(self, job: FleetJob) -> None:
+        """Record the job's submit -> terminal latency exactly once
+        (`t_submit` is zeroed after observing)."""
+        if job.t_submit <= 0.0:
+            return
+        ms = (time.monotonic() - job.t_submit) * 1e3
+        job.t_submit = 0.0
+        self._latency_hist.observe(ms)
+        _M_LATENCY.observe(ms, layer="fleet")
+
     def step(self) -> List[FleetJob]:
         """Admit what fits everywhere (growing backed-up pools when
         autoscaling), let the policy pick ONE pool, advance its batched
@@ -486,6 +562,8 @@ class PlacementScheduler:
                     self._write_back(job, self.problem(job.device))
                 finished.append(job)
             self._admit(key)               # freed slots refill now
+        for job in finished:
+            self._observe_terminal(job)
         return finished
 
     def run_all(self) -> List[FleetJob]:
@@ -509,7 +587,9 @@ class PlacementScheduler:
             out.append(ProgressUpdate(
                 jid=job.jid, status=JobStatus.RUNNING, gens=pj.gens,
                 budget=pj.budget, metric=pj.metric,
-                best_objs=pj.best_objs))
+                best_objs=pj.best_objs,
+                convergence=tuple(
+                    list(pj.history)[-CONVERGENCE_TAIL:])))
         return out
 
     # ------------------------------------------------------------ closing
@@ -542,18 +622,19 @@ class PlacementScheduler:
                 self._pools[key].stats(),
                 queue_depth=len(self._pending[key]))
         statuses = [j.status for j in self.jobs.values()]
-        out = {
-            "schema_version": api.STATS_SCHEMA_VERSION,
-            "n_pools": len(self._pools),
-            "jobs_submitted": self.next_jid,
-            "jobs_done": sum(s is JobStatus.DONE for s in statuses),
-            "jobs_failed": sum(s is JobStatus.FAILED for s in statuses),
-            "jobs_cancelled": sum(s is JobStatus.CANCELLED
-                                  for s in statuses),
-            "policy": getattr(self.policy, "name", type(self.policy).__name__),
-            "autoscale_events": list(self.autoscale_events),
-            "pools": pools,
-        }
+        out = api.stats_payload(
+            n_pools=len(self._pools),
+            jobs_submitted=self.next_jid,
+            jobs_done=sum(s is JobStatus.DONE for s in statuses),
+            jobs_failed=sum(s is JobStatus.FAILED for s in statuses),
+            jobs_cancelled=sum(s is JobStatus.CANCELLED
+                               for s in statuses),
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
+            autoscale_events=list(self.autoscale_events),
+            pools=pools,
+            # --- appended under schema_version 2 (observability) ---
+            job_latency_ms_hist=self._latency_hist.to_dict(),
+        )
         if self.store is not None:
             out["cache"] = self.store.stats()
         if self.prewarmer is not None:

@@ -124,17 +124,19 @@ def test_jobhandle_failure_and_timeout_surface():
 def test_stats_schema_versioned_across_layers():
     svc = PlacementService(BASE, CFG, n_slots=1, gens_per_step=2)
     s = svc.stats()
-    assert s["schema_version"] == 1
+    assert s["schema_version"] == 2
     for key in ("n_slots", "steps", "step_compiles", "jobs_cancelled",
-                "time_to_first_gen_ms", "recompiles_total"):
+                "time_to_first_gen_ms", "recompiles_total",
+                "step_ms_hist", "convergence", "tracing_enabled"):
         assert key in s
     sched = PlacementScheduler(n_slots=1, gens_per_step=2)
     sched.submit_request(_req(seed=3))
     sched.run_all()
     f = sched.stats()
-    assert f["schema_version"] == 1
+    assert f["schema_version"] == 2
     assert f["jobs_done"] == 1 and f["jobs_cancelled"] == 0
-    assert all(p["schema_version"] == 1 for p in f["pools"].values())
+    assert "job_latency_ms_hist" in f
+    assert all(p["schema_version"] == 2 for p in f["pools"].values())
 
 
 # --------------------------------------------------------- cancellation

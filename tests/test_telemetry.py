@@ -1,0 +1,299 @@
+"""Observability layer: metrics registry, tracing, exporters, frontend ETA.
+
+Covers the observability PR's acceptance contracts:
+  * `runtime.telemetry`: counter/gauge/histogram semantics, instrument
+    memoization (same name -> same instance, kind mismatch raises),
+    Prometheus text exposition (cumulative buckets, `+Inf` == `_count`,
+    label escaping) and the stdlib HTTP exporter,
+  * `serve.tracing`: span/instant recording, the enable/disable switch,
+    Chrome-trace export, and the JSONL sink,
+  * reconciliation under load: 32 concurrent clients through the async
+    front-end with tracing on -- every submitted job emits exactly one
+    `job.submit` and exactly one terminal event, cancelled jobs emit
+    `job.cancelled` and never `job.harvested`, and the event counts
+    reconcile EXACTLY with the layered `stats()` counters,
+  * traces survive `drain()` / `aclose()`: `JobHandle.trace()` still
+    returns the span tree and convergence history after the front-end is
+    gone,
+  * the frontend ETA regression (`_extrapolate_eta`): never negative,
+    `None` at ~zero elapsed / zero gens / non-finite metric.
+
+Tracing is process-global state: every test that enables it restores the
+prior state in a finally (the suite must leave tracing off for the
+purity-sensitive tests around it).
+
+No pytest-asyncio in the toolchain: async scenarios run under
+`asyncio.run()` inside synchronous tests.
+"""
+import asyncio
+import json
+import urllib.request
+
+import pytest
+
+from repro.core import nsga2
+from repro.runtime import telemetry
+from repro.serve import tracing
+from repro.serve.api import JobCancelledError, JobRequest, stats_payload
+from repro.serve.frontend import PlacementFrontend, _extrapolate_eta
+from repro.serve.scheduler import PlacementScheduler
+
+CFG = nsga2.NSGA2Config(pop_size=8)
+
+
+def _req(seed: int, budget: int = 4, **kw) -> JobRequest:
+    return JobRequest(device="xcvu_test", cfg=CFG, seed=seed,
+                      budget=budget, **kw)
+
+
+# --------------------------------------------------- metrics registry
+
+def test_counter_gauge_histogram_semantics():
+    reg = telemetry.MetricsRegistry()
+    c = reg.counter("t_jobs_total", "jobs")
+    c.inc()
+    c.inc(2, device="a")
+    assert c.value() == 1 and c.value(device="a") == 2
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("t_depth", "queue depth")
+    g.set(5)
+    g.inc(2)
+    g.dec()
+    assert g.value() == 6
+    h = reg.histogram("t_lat_ms", "latency", buckets=(1, 10, 100))
+    for v in (0.5, 5, 50, 500):
+        h.observe(v)
+    d = h.to_dict()
+    assert d["count"] == 4 and d["sum"] == 555.5
+    assert d["counts"] == [1, 1, 1] and d["overflow"] == 1
+
+
+def test_registry_memoizes_and_rejects_kind_mismatch():
+    reg = telemetry.MetricsRegistry()
+    a = reg.counter("t_same", "x")
+    assert reg.counter("t_same", "x") is a
+    with pytest.raises(TypeError):
+        reg.gauge("t_same", "x")
+    with pytest.raises(ValueError):
+        reg.histogram("t_bad", "x", buckets=(10, 1))   # not ascending
+
+
+def test_prometheus_text_exposition_well_formed():
+    reg = telemetry.MetricsRegistry()
+    reg.counter("t_ops_total", "ops").inc(3, kind='we"ird\\')
+    h = reg.histogram("t_ms", "ms", buckets=(1, 10))
+    h.observe(5, layer="fe")
+    h.observe(50, layer="fe")
+    text = reg.prometheus_text()
+    assert "# TYPE t_ops_total counter" in text
+    assert "# HELP t_ms ms" in text
+    # label escaping: backslash and quote escaped in the exposition
+    assert 'kind="we\\"ird\\\\"' in text
+    # cumulative buckets; +Inf bucket equals _count
+    assert 't_ms_bucket{layer="fe",le="1"} 0' in text
+    assert 't_ms_bucket{layer="fe",le="10"} 1' in text
+    assert 't_ms_bucket{layer="fe",le="+Inf"} 2' in text
+    assert 't_ms_count{layer="fe"} 2' in text
+
+
+def test_http_exporter_serves_scrape():
+    reg = telemetry.MetricsRegistry()
+    reg.counter("t_scrape_total", "scrapes").inc(7)
+    server, port = telemetry.start_http_server(0, reg)
+    try:
+        url = f"http://127.0.0.1:{port}/metrics"
+        with urllib.request.urlopen(url, timeout=10) as r:
+            assert r.status == 200
+            assert "version=0.0.4" in r.headers["Content-Type"]
+            body = r.read().decode("utf-8")
+        assert "t_scrape_total 7" in body
+    finally:
+        server.shutdown()
+
+
+def test_compile_meter_rows_in_global_registry():
+    text = telemetry.registry().prometheus_text()
+    assert "repro_compiles_total" in text
+    assert "repro_compile_cache_hits_total" in text
+
+
+def test_stats_payload_stamps_schema_version():
+    s = stats_payload(a=1, b=2)
+    assert list(s)[0] == "schema_version"
+    assert s["a"] == 1 and s["b"] == 2
+
+
+# --------------------------------------------------------- tracing core
+
+def test_tracer_spans_instants_and_chrome_export(tmp_path):
+    was = tracing.enabled()
+    tracing.enable()
+    t = tracing.tracer()
+    t.clear()
+    try:
+        tid = tracing.new_trace_id()
+        t.instant("job.submit", trace_id=tid, seed=1)
+        with t.span("pool.step", active=3):
+            t.instant("job.harvested", trace_id=tid, gens=4)
+        evs = t.events(tid)
+        assert [e.name for e in evs] == ["job.submit", "job.harvested"]
+        assert evs[0].attrs["seed"] == 1
+        pairs = tracing.span_pairs(t.events())
+        assert [n for n, _ in pairs] == ["pool.step"]
+        assert all(dt >= 0 for _, dt in pairs)
+        out = tmp_path / "chrome.json"
+        t.write_chrome_trace(str(out))
+        doc = json.loads(out.read_text())
+        phases = [e["ph"] for e in doc["traceEvents"]]
+        assert phases.count("B") == phases.count("E") == 1
+        assert phases.count("i") == 2
+    finally:
+        t.clear()
+        if not was:
+            tracing.disable(close_sinks=False)
+
+
+def test_tracing_disabled_records_nothing():
+    assert not tracing.enabled()           # suite invariant: default off
+    before = len(tracing.tracer().events())
+    tracing.tracer().instant("job.submit", trace_id="t-x")
+    assert len(tracing.tracer().events()) == before
+
+
+def test_jsonl_sink_appends_valid_lines(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    was = tracing.enabled()
+    tracing.enable(jsonl_path=str(path))
+    try:
+        tracing.tracer().instant("job.submit", trace_id="t-1", seed=9)
+    finally:
+        tracing.disable(close_sinks=True)
+        if was:
+            tracing.enable()
+    (line,) = path.read_text().strip().splitlines()
+    ev = json.loads(line)
+    assert ev["name"] == "job.submit" and ev["trace"] == "t-1"
+    assert ev["attrs"]["seed"] == 9
+
+
+# ------------------------------------------------------ frontend ETA
+
+def test_eta_never_negative_and_none_edge_cases():
+    # steady progress: linear extrapolation of the remaining budget
+    assert _extrapolate_eta(gens=4, budget=8, elapsed=2.0) == 2.0
+    # overshoot (gens > budget after a final partial step) clamps to 0,
+    # never a negative ETA
+    assert _extrapolate_eta(gens=10, budget=8, elapsed=2.0) == 0.0
+    # ~zero elapsed (first boundary lands inside the timer resolution)
+    assert _extrapolate_eta(gens=4, budget=8, elapsed=0.0) is None
+    assert _extrapolate_eta(gens=4, budget=8, elapsed=1e-9) is None
+    # no generations served yet
+    assert _extrapolate_eta(gens=0, budget=8, elapsed=2.0) is None
+    # metric hasn't improved off its +inf init: no meaningful progress
+    assert _extrapolate_eta(gens=4, budget=8, elapsed=2.0,
+                            metric=float("inf")) is None
+
+
+# -------------------------------------- reconciliation under 32 clients
+
+def test_32_clients_events_reconcile_with_stats():
+    n_clients, cancel_every = 32, 8
+    was = tracing.enabled()
+    tracing.enable()
+    tracing.tracer().clear()
+
+    async def client(fe, i):
+        if (i + 1) % cancel_every == 0:
+            # un-finishable budget: the cancel can never lose the race
+            h = await fe.submit(_req(seed=i, budget=10_000))
+            assert h.cancel() is True
+            with pytest.raises(JobCancelledError):
+                await h.wait()
+            return h
+        h = await fe.submit(_req(seed=i, budget=4))
+        await h.wait()
+        return h
+
+    async def main():
+        sched = PlacementScheduler(n_slots=8, gens_per_step=2)
+        async with PlacementFrontend(sched, max_queue=16) as fe:
+            handles = await asyncio.gather(
+                *[client(fe, i) for i in range(n_clients)])
+            stats = fe.stats()
+        return handles, stats               # frontend now aclosed
+
+    try:
+        handles, stats = asyncio.run(main())
+        n_cancelled = n_clients // cancel_every
+        assert stats["submitted"] == n_clients
+        assert stats["cancelled"] == n_cancelled
+        assert stats["completed"] == n_clients - n_cancelled
+        assert stats["failed"] == 0
+
+        evs = tracing.tracer().events()
+        by_name: dict = {}
+        for e in evs:
+            by_name.setdefault(e.name, []).append(e)
+        # event counts reconcile EXACTLY with the stats() counters
+        assert len(by_name["job.submit"]) == stats["submitted"]
+        assert len(by_name["job.harvested"]) == stats["completed"]
+        assert len(by_name["job.cancelled"]) == stats["cancelled"]
+        assert "job.failed" not in by_name
+        n_terminal = sum(len(by_name.get(n, []))
+                         for n in tracing.TERMINAL_EVENTS)
+        assert n_terminal == stats["submitted"]
+
+        # per-trace exactly-once terminal; cancelled never harvested --
+        # and the traces survived aclose()
+        for h in handles:
+            tr = h.trace()
+            names = [e.name for e in tr.events]
+            assert names.count("job.submit") == 1
+            terminals = [n for n in names if n in tracing.TERMINAL_EVENTS]
+            assert len(terminals) == 1
+            if h.status.value == "cancelled":
+                assert terminals == ["job.cancelled"]
+                assert "job.harvested" not in names
+            else:
+                assert terminals == ["job.harvested"]
+                # live convergence telemetry rode the progress stream
+                assert tr.convergence
+                gens = [g for g, _ in tr.convergence]
+                assert gens == sorted(gens)
+        # latency observed exactly once per job, on the frontend layer
+        assert stats["job_latency_ms_hist"]["count"] == n_clients
+        assert stats["tracing_enabled"] is True
+    finally:
+        tracing.tracer().clear()
+        if not was:
+            tracing.disable(close_sinks=False)
+
+
+def test_traces_survive_drain():
+    was = tracing.enabled()
+    tracing.enable()
+    tracing.tracer().clear()
+
+    async def main():
+        sched = PlacementScheduler(n_slots=2, gens_per_step=2)
+        async with PlacementFrontend(sched, max_queue=8) as fe:
+            handles = [await fe.submit(_req(seed=40 + i, budget=4))
+                       for i in range(4)]
+            await fe.drain()
+            return handles
+
+    try:
+        handles = asyncio.run(main())
+        for h in handles:
+            tr = h.trace()
+            assert tr.trace_id is not None
+            names = [e.name for e in tr.events]
+            assert names[0] == "job.submit"
+            assert names[-1] == "job.harvested"
+            # span_pairs-backed phase breakdown stays available too
+            assert isinstance(tr.phases, list)
+    finally:
+        tracing.tracer().clear()
+        if not was:
+            tracing.disable(close_sinks=False)
